@@ -1,0 +1,106 @@
+"""Generate the EXPERIMENTS.md §Dry-run + §Roofline tables from the
+per-cell JSONs in experiments/dryrun/.
+
+    PYTHONPATH=src python experiments/make_report.py > experiments/roofline.md
+"""
+
+import glob
+import json
+import pathlib
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    return f"{x:.3g}"
+
+
+def load_cells():
+    cells = {}
+    variants = {}
+    for f in glob.glob(str(HERE / "dryrun" / "*.json")):
+        d = json.load(open(f))
+        parts = pathlib.Path(f).stem.split("__")
+        if len(parts) > 3 or "variant" in d:  # tagged hillclimb variant
+            variants[(d["arch"], d["shape"], d["mesh"], parts[-1])] = d
+        else:
+            cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells, variants
+
+
+def dryrun_table(cells):
+    lines = [
+        "| arch | shape | mesh | status | compile s | bytes/device (arg+tmp) | HLO collective ops |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for (a, s, m), d in sorted(cells.items()):
+        if d["status"] == "ok":
+            mem = d["memory"]
+            per_dev = (mem["argument_bytes"] + mem["temp_bytes"]) / 1e9
+            counts = d.get("collectives_full_compile", {}).get("_counts", {})
+            cstr = " ".join(f"{k.split('-')[-1] if False else k}:{v}" for k, v in sorted(counts.items()))
+            lines.append(
+                f"| {a} | {s} | {m} | ok | {d['compile_seconds']} | {per_dev:.1f} GB | {cstr} |"
+            )
+        else:
+            lines.append(
+                f"| {a} | {s} | {m} | {d['status']} | — | — | {d.get('reason', d.get('error', ''))[:60]} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table(cells):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | MODEL_FLOPS | useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s, m), d in sorted(cells.items()):
+        if m != "pod1" or d["status"] != "ok" or "roofline" not in d:
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {a} | {s} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{r['dominant']}** | {r['model_flops']:.3g} | "
+            f"{r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def variants_table(cells, variants):
+    lines = [
+        "| arch | shape | variant | compute s | memory s | collective s | dominant |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for (a, s, m, tag), d in sorted(variants.items()):
+        if d["status"] != "ok" or "roofline" not in d:
+            continue
+        base = cells.get((a, s, m), {}).get("roofline")
+        r = d["roofline"]
+        def delta(key):
+            if not base:
+                return fmt_s(r[key])
+            return f"{r[key]:.3g} ({r[key] / max(base[key], 1e-12):.2f}×)"
+        lines.append(
+            f"| {a} | {s} | {tag} | {delta('compute_s')} | {delta('memory_s')} | "
+            f"{delta('collective_s')} | {r['dominant']} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    cells, variants = load_cells()
+    n_ok = sum(1 for d in cells.values() if d["status"] == "ok")
+    n_fail = sum(1 for d in cells.values() if d["status"] == "FAILED")
+    n_skip = sum(1 for d in cells.values() if d["status"] == "skipped")
+    print(f"## §Dry-run  ({n_ok} ok / {n_skip} skipped / {n_fail} failed)\n")
+    print(dryrun_table(cells))
+    print("\n## §Roofline (single-pod, 256 × v5e)\n")
+    print(roofline_table(cells))
+    print("\n## §Perf hillclimb variants (vs baseline)\n")
+    print(variants_table(cells, variants))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Core library: the paper's contribution — Swapped Dragonfly topology,
+source-vector routing, and the four algorithms with their conflict-free
+round schedules, plus the simulator that verifies every claim."""
+
+from repro.core.topology import D3, Router
+from repro.core.routing import (
+    Vector,
+    SyncHeader,
+    STAR,
+    vector_for,
+    vector_dest,
+    vector_path,
+)
+from repro.core.simulator import Simulator, check_vector_round, assert_conflict_free
+from repro.core.alltoall import DAParams, rounds, round_vectors, pipeline
+from repro.core.matmul import MatmulGrid, simulate_matmul, simulate_vector_matmul
+from repro.core.hypercube import SBH
+from repro.core.emulation import embed, largest_embeddable
+
+__all__ = [
+    "D3",
+    "Router",
+    "Vector",
+    "SyncHeader",
+    "STAR",
+    "vector_for",
+    "vector_dest",
+    "vector_path",
+    "Simulator",
+    "check_vector_round",
+    "assert_conflict_free",
+    "DAParams",
+    "rounds",
+    "round_vectors",
+    "pipeline",
+    "MatmulGrid",
+    "simulate_matmul",
+    "simulate_vector_matmul",
+    "SBH",
+    "embed",
+    "largest_embeddable",
+]

@@ -1,0 +1,98 @@
+"""Property 2 — sub-network emulation: D3(J, L) ⊂ D3(K, M).
+
+The routers of D3(K,M) with c in a J-subset C ⊆ Z_K and BOTH d and p in an
+L-subset P ⊆ Z_M form a closed subnetwork isomorphic (dilation-1) to
+D3(J, L), provided C and P are subgroups-like index sets closed under the
+difference arithmetic the ports use. We use the canonical choice
+C = {0..J-1} with port arithmetic relabeled through the subset index —
+i.e. the embedded network's port g means "go to the g-th element of C",
+realized on D3(K,M) by the port (C[(idx(c)+g) % J] - c) mod K, which is a
+legal global port. Same for local ports within P.
+
+This is the framework's *elastic scaling* mechanism: when chips die, the
+runtime selects the largest (J, L) with J ≤ K, L ≤ M such that a healthy
+C × P × P router set exists, re-derives every schedule on D3(J, L), and
+re-shards. See train/fault_tolerance.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.topology import D3, Router
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding:
+    """Maps D3(J, L) routers onto a C × P × P subset of D3(K, M)."""
+
+    host: D3
+    guest: D3
+    c_set: tuple[int, ...]
+    p_set: tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        if len(self.c_set) != self.guest.K or len(self.p_set) != self.guest.M:
+            raise ValueError("subset sizes must match guest dimensions")
+        if len(set(self.c_set)) != len(self.c_set) or len(set(self.p_set)) != len(self.p_set):
+            raise ValueError("subsets must be duplicate-free")
+
+    def map_router(self, r: Router) -> Router:
+        c, d, p = r
+        return (self.c_set[c], self.p_set[d], self.p_set[p])
+
+    def map_local_port(self, r: Router, delta: int) -> int:
+        """Guest local port delta at guest router r -> host local port."""
+        c, d, p = r
+        src = self.p_set[p]
+        dst = self.p_set[(p + delta) % self.guest.M]
+        return (dst - src) % self.host.M
+
+    def map_global_port(self, r: Router, gamma: int) -> int:
+        c, d, p = r
+        src = self.c_set[c]
+        dst = self.c_set[(c + gamma) % self.guest.K]
+        return (dst - src) % self.host.K
+
+    def verify(self) -> None:
+        """Every guest link maps to a host link (dilation 1) and the global
+        hop's d/p swap is preserved."""
+        g, h = self.guest, self.host
+        for r in g.routers():
+            hr = self.map_router(r)
+            for delta in range(1, g.M):
+                dst = g.local_hop(r, delta)
+                hdst = self.map_router(dst)
+                if not h.is_local_link(hr, hdst):
+                    raise AssertionError(f"local {r}->{dst} maps to non-link {hr}->{hdst}")
+            for gamma in range(g.K):
+                dst = g.global_hop(r, gamma)
+                if dst == r:
+                    continue
+                hdst = self.map_router(dst)
+                if not h.is_global_link(hr, hdst):
+                    raise AssertionError(f"global {r}->{dst} maps to non-link {hr}->{hdst}")
+
+
+def embed(host: D3, J: int, L: int, c_set=None, p_set=None) -> Embedding:
+    if J > host.K or L > host.M:
+        raise ValueError("guest must not exceed host")
+    c_set = tuple(c_set) if c_set is not None else tuple(range(J))
+    p_set = tuple(p_set) if p_set is not None else tuple(range(L))
+    emb = Embedding(host, D3(J, L), c_set, p_set)
+    emb.verify()
+    return emb
+
+
+def largest_embeddable(host: D3, dead: set[Router]) -> tuple[int, int, tuple, tuple]:
+    """Greedy survivor-set search: drop any cabinet c that contains a dead
+    router, and any position index appearing in a dead router of surviving
+    cabinets; returns (J, L, c_set, p_set). Conservative but fast — used
+    by elastic failover (a failed chip poisons its (c) and (d,p) indices)."""
+    bad_c = {r[0] for r in dead}
+    c_set = tuple(c for c in range(host.K) if c not in bad_c)
+    bad_p = {r[1] for r in dead if r[0] in c_set} | {r[2] for r in dead if r[0] in c_set}
+    p_set = tuple(p for p in range(host.M) if p not in bad_p)
+    if not c_set or not p_set:
+        raise RuntimeError("no embeddable subnetwork survives")
+    return len(c_set), len(p_set), c_set, p_set

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot-spots: the §2 local block product
+(block_matmul) and tiled attention (flash_attention). Each kernel ships a
+pure-jnp oracle (ref.py) and is validated in interpret mode on CPU."""
+
+from repro.kernels.block_matmul.ops import matmul as block_matmul_op
+from repro.kernels.flash_attention.ops import gqa_attention
+
+__all__ = ["block_matmul_op", "gqa_attention"]

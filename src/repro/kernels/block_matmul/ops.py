@@ -1,0 +1,17 @@
+"""Public entry point: picks the Pallas kernel on TPU, interpret mode on
+CPU (tests), with the pure-jnp oracle available for fallback/validation."""
+
+import jax
+
+from repro.kernels.block_matmul.block_matmul import block_matmul
+from repro.kernels.block_matmul.ref import block_matmul_ref
+
+
+def matmul(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """Dispatch: real kernel on TPU; interpret=True elsewhere (correctness
+    path — the kernel body runs in Python on CPU)."""
+    on_tpu = jax.default_backend() == "tpu"
+    return block_matmul(a, b, interpret=not on_tpu, **kw)
+
+
+__all__ = ["matmul", "block_matmul", "block_matmul_ref"]

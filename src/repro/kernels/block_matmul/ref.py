@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the block matmul kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def block_matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    if out_dtype is None:
+        out_dtype = a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)

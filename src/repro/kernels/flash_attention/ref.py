@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (materializes the score matrix)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale"))
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """q: (BH, Sq, D), k/v: (BH, Sk, D)."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows that are fully masked produce uniform softmax over -1e30; zero them
+    any_valid = mask.any(axis=1)[None, :, None]
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    out = jnp.where(any_valid, out, 0.0)
+    return out.astype(q.dtype)

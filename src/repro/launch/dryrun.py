@@ -1,0 +1,467 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell, print memory_analysis() and cost_analysis(), extract the
+roofline terms, and persist one JSON per cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Loop-body FLOP counting: XLA's cost analysis counts a while-loop body
+ONCE (verified empirically), so scanned layer stacks undercount. We
+therefore compile depth-1 and depth-2 variants of each model and
+extrapolate: total = c1 + (c2 - c1)·(n_groups - 1). The FULL-depth
+program is still compiled — that compile IS the dry-run pass/fail and
+the source of memory_analysis() and the collective schedule.
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ARCH_IDS, SHAPES, get_config, input_specs, cell_supported,
+)
+from repro.launch.mesh import make_production_mesh, make_rules
+from repro.models import model as M
+from repro.train import optimizer as O
+from repro.train.train_step import TrainSettings, make_train_step, train_shardings
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# TPU v5e constants (roofline denominators)
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # B/s per chip
+LINK_BW = 50e9            # B/s per ICI link
+
+# per-arch microbatch counts for train_4k (activation-memory control)
+MICROBATCHES = {
+    "llama3-405b": 16,
+    "deepseek-v3-671b": 16,
+    "jamba-1.5-large-398b": 8,
+    "mixtral-8x7b": 4,
+    "qwen2-vl-7b": 4,
+    "phi3-mini-3.8b": 2,
+    "musicgen-large": 2,
+    "tinyllama-1.1b": 1,
+    "olmo-1b": 1,
+    "xlstm-1.3b": 2,
+}
+FACTORED_OPT = {"llama3-405b", "deepseek-v3-671b", "jamba-1.5-large-398b"}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce-start|all-gather-start|reduce-scatter-start|all-to-all-start|"
+    r"collective-permute-start|all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)\("
+)
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind (each op counted once —
+    loop-resident collectives are handled by the depth extrapolation)."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.groups()
+        kind = kind.replace("-start", "")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        b = n * _DTYPE_BYTES.get(dtype, 4)
+        out[kind] = out.get(kind, 0.0) + b
+        count[kind] = count.get(kind, 0) + 1
+    out["_counts"] = count
+    return out
+
+
+def _depth_variant(cfg, groups: int):
+    period = len(cfg.layer_kinds())
+    prefix = min(cfg.first_dense_layers, 1)  # trip-1 prefix: no undercount
+    return dataclasses.replace(
+        cfg, n_layers=prefix + period * groups, first_dense_layers=prefix
+    )
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --------------------------------------------------------------- lowerings
+def lower_train(cfg, shape, mesh, rules, microbatches, *, cost_mode=False,
+                cost_attn="naive"):
+    opt_cfg = O.OptConfig(factored=cfg.name in FACTORED_OPT)
+    # cost_mode: unrolled groups + no microbatch scan, so cost_analysis
+    # counts every layer (XLA counts loop bodies once; total flops are
+    # microbatch-invariant). cost_attn picks the attention for the pair:
+    #   naive — exact FLOP counting (materialized scores, no inner loops)
+    #   flash — boundary-accurate BYTES (no fake S² HBM traffic)
+    settings = TrainSettings(
+        microbatches=1 if cost_mode else microbatches,
+        use_kernel=(cost_attn == "flash") if cost_mode else True,
+        remat=True,  # remat is per-group and unrolled in cost_mode: counted
+        unroll=cost_mode,
+    )
+    step = make_train_step(cfg, opt_cfg, settings)
+    pspecs, ospecs, bspecs, _ = train_shardings(cfg, rules, opt_cfg, settings)
+
+    params_sds = jax.eval_shape(lambda: M.init_params(jax.random.key(0), cfg))
+    opt_sds = jax.eval_shape(lambda: O.init_state(params_sds, opt_cfg))
+    batch_sds = input_specs(cfg, shape)
+
+    in_sh = (_named(mesh, pspecs), _named(mesh, ospecs), _named(mesh, bspecs))
+    out_sh = (in_sh[0], in_sh[1], None)
+    f = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(0, 1))
+    return f.lower(params_sds, opt_sds, batch_sds)
+
+
+def lower_prefill(cfg, shape, mesh, rules, *, cost_mode=False, cost_attn="naive"):
+    def prefill(params, batch):
+        use_kernel = (cost_attn == "flash") if cost_mode else True
+        logits, aux, h = M.forward_train(
+            params, batch, cfg, use_kernel=use_kernel, remat=False,
+            unroll=cost_mode,
+        )
+        return logits[:, -1]  # last-token logits (cache write bytes noted in report)
+
+    pspecs = M.param_specs(cfg, rules)
+    bspecs = {}
+    if cfg.embeds_input:
+        bspecs["embeds"] = rules.activations()
+        bspecs["labels"] = rules.tokens()
+    else:
+        bspecs["tokens"] = rules.tokens()
+        bspecs["labels"] = rules.tokens()
+    if cfg.rope == "mrope":
+        bspecs["mrope_positions"] = P(None, rules.batch_axes, None)
+    params_sds = jax.eval_shape(lambda: M.init_params(jax.random.key(0), cfg))
+    batch_sds = input_specs(cfg, shape)
+    f = jax.jit(
+        prefill,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+        out_shardings=NamedSharding(mesh, P(rules.batch_axes, None)),
+    )
+    return f.lower(params_sds, batch_sds)
+
+
+def lower_decode(cfg, shape, mesh, rules, *, cost_mode=False, cost_attn="naive"):
+    long_ctx = shape.seq_len >= 262144
+
+    def serve_step(params, cache, batch):
+        pos = shape.seq_len - 1
+        return M.decode_step(params, cache, batch, pos, cfg, unroll=cost_mode)
+
+    pspecs = M.param_specs(cfg, rules)
+    cspecs = M.cache_specs(cfg, rules, long_ctx)
+    if shape.global_batch % 16:
+        # batch too small to shard over the data axis (long_500k: B=1) —
+        # replicate the batch dims, keep the sequence sharding.
+        b = rules.batch_axes
+
+        def debatch(spec):
+            return P(*[None if ax == b else ax for ax in spec])
+
+        cspecs = jax.tree.map(debatch, cspecs, is_leaf=lambda x: isinstance(x, P))
+    params_sds = jax.eval_shape(lambda: M.init_params(jax.random.key(0), cfg))
+    cache_sds = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len, jnp.bfloat16)
+    )
+    batch_sds = input_specs(cfg, shape)
+    batch_ax = None if shape.global_batch % 16 else rules.batch_axes
+    bspecs = {}
+    for k in batch_sds:
+        if k == "mrope_positions":
+            bspecs[k] = P(None, batch_ax, None)
+        elif k == "embed":
+            bspecs[k] = P(batch_ax, None)
+        else:
+            bspecs[k] = P(batch_ax)
+    in_sh = (_named(mesh, pspecs), _named(mesh, cspecs), _named(mesh, bspecs))
+    out_sh = (NamedSharding(mesh, P(batch_ax, None)), in_sh[1])
+    f = jax.jit(serve_step, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(1,))
+    return f.lower(params_sds, cache_sds, batch_sds)
+
+
+def lower_cell(cfg, shape, mesh, rules, microbatches, *, cost_mode=False,
+               cost_attn="naive"):
+    if shape.kind == "train":
+        return lower_train(cfg, shape, mesh, rules, microbatches,
+                           cost_mode=cost_mode, cost_attn=cost_attn)
+    if shape.kind == "prefill":
+        return lower_prefill(cfg, shape, mesh, rules, cost_mode=cost_mode,
+                             cost_attn=cost_attn)
+    return lower_decode(cfg, shape, mesh, rules, cost_mode=cost_mode,
+                        cost_attn=cost_attn)
+
+
+# ----------------------------------------------------------------- analyze
+def _cost(compiled):
+    ca = compiled.cost_analysis()
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def inner_loop_correction(cfg, shape, rules) -> float:
+    """Analytic per-chip FLOP correction for sequence-inner loops that even
+    the unrolled cost compiles count once (sLSTM's recurrent scan and
+    mLSTM's chunk scan — xlstm only; Mamba uses associative_scan, which is
+    log-depth combinators and fully counted).
+
+    train: ×4 (fwd + recompute + 2·bwd under remat); prefill: ×1.
+    """
+    if not cfg.xlstm or shape.kind == "decode":
+        return 0.0
+    d = cfg.d_model
+    H = cfg.n_heads
+    dp = int(cfg.xlstm.proj_factor_mlstm * d)
+    dh = dp // H
+    tshard = rules.model_axis_size
+    T_local = shape.global_batch * shape.seq_len / 16  # data-axis sharding
+    pattern = cfg.layer_kinds()
+    n_mlstm = sum(1 for m, _ in pattern if m == "mlstm") * cfg.n_groups
+    n_slstm = sum(1 for m, _ in pattern if m == "slstm") * cfg.n_groups
+    chunk = 256
+    # mLSTM per token: intra-chunk scores+values 4·c·H·dh, inter/state 8·H·dh²
+    mlstm_tok = 4 * chunk * H * dh + 8 * H * dh * dh
+    # sLSTM per token: 2·(9·d²) matmul flops, model-sharded
+    slstm_tok = 2 * 9 * d * d / tshard
+    fwd = T_local * (n_mlstm * mlstm_tok + n_slstm * slstm_tok)
+    mult = 4.0 if shape.kind == "train" else 1.0
+    # subtract the once-counted single iteration (negligible, S >= 4096)
+    return fwd * mult
+
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool, force=False,
+                 variant: dict | None = None, tag: str = "") -> dict:
+    shape = SHAPES[shape_name]
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    suffix = f"__{tag}" if tag else ""
+    out_path = RESULTS_DIR / f"{arch}__{shape_name}__{mesh_tag}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    ok, reason = cell_supported(arch, shape_name)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "time": time.time(),
+    }
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        _save(out_path, result)
+        return result
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(multi_pod=multi_pod)
+    if variant:
+        result["variant"] = variant
+        mb_override = variant.pop("microbatches", None)
+        rules = dataclasses.replace(rules, **variant)
+        variant["microbatches"] = mb_override
+    else:
+        mb_override = None
+    from repro.dist import sharding as SH
+    SH.set_active(rules, mesh)  # model-internal sharding constraints (MoE)
+    n_chips = int(np.prod(mesh.devices.shape))
+    mb = MICROBATCHES.get(arch, 1) if shape.kind == "train" else 1
+    if mb_override:
+        mb = mb_override
+
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, shape, mesh, rules, mb)
+        compiled = lowered.compile()
+    except Exception as e:  # a dry-run failure is a bug in the system
+        result["status"] = "FAILED"
+        result["error"] = f"{type(e).__name__}: {e}"[:2000]
+        _save(out_path, result)
+        return result
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(f"[{arch} × {shape_name} × {mesh_tag}] memory_analysis():", mem, flush=True)
+    flops_full, bytes_full = _cost(compiled)
+    print(f"[{arch} × {shape_name} × {mesh_tag}] cost_analysis(): flops={flops_full:.3e} bytes={bytes_full:.3e}", flush=True)
+    hlo = compiled.as_text()
+    coll_full = collective_bytes(hlo)
+
+    # depth-extrapolated true cost (loop bodies count once — see header)
+    extrap = {}
+    if not multi_pod:  # roofline table is single-pod only
+        try:
+            d1, d2 = _depth_variant(cfg, 1), _depth_variant(cfg, 2)
+            # FLOPs pair: naive attention (every score tile counted)
+            cn1 = lower_cell(d1, shape, mesh, rules, mb, cost_mode=True, cost_attn="naive").compile()
+            cn2 = lower_cell(d2, shape, mesh, rules, mb, cost_mode=True, cost_attn="naive").compile()
+            # bytes/collectives pair: flash attention (no fake S^2 traffic)
+            cf1 = lower_cell(d1, shape, mesh, rules, mb, cost_mode=True, cost_attn="flash").compile()
+            cf2 = lower_cell(d2, shape, mesh, rules, mb, cost_mode=True, cost_attn="flash").compile()
+            f1, _ = _cost(cn1)
+            f2, _ = _cost(cn2)
+            _, b1 = _cost(cf1)
+            _, b2 = _cost(cf2)
+            k1 = collective_bytes(cf1.as_text())
+            k2 = collective_bytes(cf2.as_text())
+            g = cfg.n_groups
+            extrap = {
+                "flops": f1 + (f2 - f1) * (g - 1) + inner_loop_correction(cfg, shape, rules),
+                "bytes": b1 + (b2 - b1) * (g - 1),
+                "collective_bytes": {
+                    kind: k1.get(kind, 0.0) + (k2.get(kind, 0.0) - k1.get(kind, 0.0)) * (g - 1)
+                    for kind in set(k1) | set(k2) if kind != "_counts"
+                },
+            }
+        except Exception as e:
+            extrap = {"error": f"{type(e).__name__}: {e}"[:500]}
+
+    result.update({
+        "status": "ok",
+        "compile_seconds": round(t_compile, 1),
+        "n_chips": n_chips,
+        "microbatches": mb,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost_full_compile": {"flops": flops_full, "bytes": bytes_full},
+        "collectives_full_compile": coll_full,
+        "cost_extrapolated": extrap,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    })
+    if not multi_pod and "flops" in extrap:
+        result["roofline"] = roofline_terms(result, cfg, shape)
+    _save(out_path, result)
+    return result
+
+
+def roofline_terms(result: dict, cfg, shape) -> dict:
+    """Three-term roofline from the extrapolated compiled cost.
+
+    cost_analysis is whole-program (all partitions symmetric under SPMD:
+    reported flops/bytes are per-partition already on the CPU backend?
+    Empirically cost_analysis on a partitioned module reports the
+    PER-PARTITION program; we treat it as per-chip).
+    """
+    n = result["n_chips"]
+    ex = result["cost_extrapolated"]
+    compute_s = ex["flops"] / PEAK_FLOPS
+    memory_s = ex["bytes"] / HBM_BW
+    cbytes = sum(v for v in ex["collective_bytes"].values())
+    collective_s = cbytes / LINK_BW
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    if shape.kind == "train":
+        model_flops = 6 * cfg.active_param_count() * tokens
+    else:
+        model_flops = 2 * cfg.active_param_count() * tokens
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    hlo_flops_global = ex["flops"] * n
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / max(hlo_flops_global, 1.0),
+        "step_time_bound_s": max(compute_s, memory_s, collective_s),
+        "roofline_fraction": compute_s / max(compute_s, memory_s, collective_s),
+    }
+
+
+def _save(path: pathlib.Path, result: dict):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(result, indent=1, default=str))
+
+
+# --------------------------------------------------------------------- CLI
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    # hillclimb variant knobs (see EXPERIMENTS.md §Perf)
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--moe-collectives", choices=["xla", "dragonfly"], default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    variant = {}
+    if args.fsdp:
+        variant["fsdp"] = True
+    if args.zero1:
+        variant["zero1"] = True
+    if args.seq_parallel:
+        variant["seq_parallel"] = True
+    if args.moe_collectives:
+        variant["moe_collectives"] = args.moe_collectives
+    if args.microbatches:
+        variant["microbatches"] = args.microbatches
+    if variant and not args.tag:
+        ap.error("--tag required when variant knobs are set")
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in cells:
+        r = analyze_cell(a, s, mp, force=args.force, variant=variant or None, tag=args.tag)
+        tag = "pod2" if mp else "pod1"
+        status = r["status"]
+        extra = ""
+        if status == "ok":
+            extra = f"compile={r['compile_seconds']}s"
+            if "roofline" in r:
+                rf = r["roofline"]
+                extra += (
+                    f" dominant={rf['dominant']}"
+                    f" terms(c/m/k)={rf['compute_s']:.3e}/{rf['memory_s']:.3e}/{rf['collective_s']:.3e}s"
+                )
+        elif status == "FAILED":
+            failures += 1
+            extra = r.get("error", "")[:160]
+        else:
+            extra = r.get("reason", "")
+        print(f"{a:24s} {s:12s} {tag}  {status:8s} {extra}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

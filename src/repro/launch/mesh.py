@@ -1,0 +1,34 @@
+"""Production meshes.
+
+    single pod : (16, 16)      axes ("data", "model")       256 chips
+    multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") 512 chips
+
+Functions, not module constants — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.dist.sharding import ShardRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_rules(*, multi_pod: bool = False, fsdp: bool = False) -> ShardRules:
+    return ShardRules(
+        tensor_axis="model",
+        data_axis="data",
+        pod_axis="pod" if multi_pod else None,
+        fsdp=fsdp,
+    )
+
+
+def axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

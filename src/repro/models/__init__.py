@@ -1,0 +1,22 @@
+"""Model zoo: composable decoder covering dense / MoE / hybrid (Mamba+attn)
+/ ssm (xLSTM) / audio / VLM backbones — the 10 assigned architectures."""
+
+from repro.models.model import (
+    init_params,
+    param_specs,
+    forward_train,
+    loss_fn,
+    init_cache,
+    cache_specs,
+    decode_step,
+)
+
+__all__ = [
+    "init_params",
+    "param_specs",
+    "forward_train",
+    "loss_fn",
+    "init_cache",
+    "cache_specs",
+    "decode_step",
+]

@@ -1,0 +1,122 @@
+"""Mamba (S6 selective SSM) block — Jamba's recurrent layer.
+
+Training: associative-scan parallel form over the sequence.
+Decode: O(1) single-step state update (conv window + SSM state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+def mamba_init(key, cfg, dtype):
+    d = cfg.d_model
+    m = cfg.mamba
+    di = m.expand * d
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    p = {
+        "w_in": L.truncated_normal(ks[0], (d, 2 * di), dtype, s),       # x and z
+        "conv_w": L.truncated_normal(ks[1], (m.d_conv, di), dtype, m.d_conv ** -0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_bcdt": L.truncated_normal(ks[2], (di, 2 * m.d_state + m.dt_rank), dtype, di ** -0.5),
+        "w_dt": L.truncated_normal(ks[3], (m.dt_rank, di), dtype, m.dt_rank ** -0.5),
+        "dt_bias": jnp.asarray(
+            jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+                ks[4], (di,), minval=jnp.log(0.001), maxval=jnp.log(0.1))))),
+            dtype,
+        ),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, m.d_state + 1, dtype=jnp.float32), (di, 1))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "w_out": L.truncated_normal(ks[5], (di, d), dtype, di ** -0.5),
+    }
+    return p
+
+
+def mamba_specs(cfg, rules):
+    t = rules.tensor_axis
+    return {
+        "w_in": P(None, t),
+        "conv_w": P(None, t),
+        "conv_b": P(t),
+        "w_bcdt": P(t, None),
+        "w_dt": P(None, t),
+        "dt_bias": P(t),
+        "A_log": P(t, None),
+        "D": P(t),
+        "w_out": P(t, None),
+    }
+
+
+def _ssm_params(params, xc, m):
+    """xc: (..., di) conv output -> dt (..., di), B, C (..., d_state)."""
+    bcdt = xc @ params["w_bcdt"]
+    Bm, Cm, dt_in = jnp.split(bcdt, [m.d_state, 2 * m.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["w_dt"] + params["dt_bias"])
+    return dt, Bm, Cm
+
+
+def mamba_train(params, x, cfg):
+    """x: (B, S, d) -> (B, S, d). Parallel scan over S."""
+    m = cfg.mamba
+    B, S, d = x.shape
+    di = m.expand * d
+    xz = x @ params["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, S, di)
+    # depthwise causal conv1d
+    pad = jnp.pad(xi, ((0, 0), (m.d_conv - 1, 0), (0, 0)))
+    xc = sum(
+        pad[:, i : i + S, :] * params["conv_w"][i][None, None, :]
+        for i in range(m.d_conv)
+    ) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _ssm_params(params, xc, m)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (di, N)
+    # discretize: a_t = exp(dt*A) (B,S,di,N); b_t = dt*B*x
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None, None])
+    bx = (dt * xc).astype(jnp.float32)[..., None] * Bm.astype(jnp.float32)[..., None, :]
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)  # (B,S,di,N)
+    y = (h * Cm.astype(jnp.float32)[..., None, :]).sum(-1)  # (B,S,di)
+    y = y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return y @ params["w_out"]
+
+
+def mamba_decode(params, x, state, cfg):
+    """x: (B, 1, d); state: {'conv': (B, d_conv-1, di), 'ssm': (B, di, N)}."""
+    m = cfg.mamba
+    B = x.shape[0]
+    xz = x[:, 0] @ params["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, di)
+    window = jnp.concatenate([state["conv"], xi[:, None]], axis=1)  # (B, d_conv, di)
+    xc = (window * params["conv_w"][None]).sum(1) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _ssm_params(params, xc, m)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None])  # (B, di, N)
+    bx = (dt * xc).astype(jnp.float32)[..., None] * Bm.astype(jnp.float32)[:, None, :]
+    h = a * state["ssm"].astype(jnp.float32) + bx
+    y = (h * Cm.astype(jnp.float32)[:, None, :]).sum(-1)
+    y = y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ params["w_out"])[:, None]
+    return out, {"conv": window[:, 1:], "ssm": h.astype(state["ssm"].dtype)}
+
+
+def mamba_state_init(cfg, batch, dtype):
+    m = cfg.mamba
+    di = m.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, m.d_state), dtype),
+    }

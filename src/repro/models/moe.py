@@ -1,0 +1,331 @@
+"""Mixture-of-Experts: top-k router, shared experts, dense-dispatch einsum
+formulation (shardable over the expert axis by pjit), plus the shard_map
+expert-parallel path that uses the paper's doubly-parallel all-to-all.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+def moe_init(key, cfg, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    s_in = d ** -0.5
+    s_out = m.d_ff_expert ** -0.5
+    p = {
+        "router": L.truncated_normal(ks[0], (d, m.num_experts), dtype, s_in),
+        "w_in": L.truncated_normal(ks[1], (m.num_experts, d, m.d_ff_expert), dtype, s_in),
+        "w_gate": L.truncated_normal(ks[2], (m.num_experts, d, m.d_ff_expert), dtype, s_in),
+        "w_out": L.truncated_normal(ks[3], (m.num_experts, m.d_ff_expert, d), dtype, s_out),
+    }
+    if m.shared_experts:
+        p["shared"] = L.mlp_init(
+            jax.random.fold_in(key, 7), d, m.d_ff_expert * m.shared_experts, dtype
+        )
+    return p
+
+
+def moe_specs(cfg, rules):
+    E = cfg.moe.num_experts
+    p = {
+        "router": P(None, None),
+        "w_in": rules.expert((E, 0, 0), ff_dim=2, n_experts=E),
+        "w_gate": rules.expert((E, 0, 0), ff_dim=2, n_experts=E),
+        "w_out": rules.expert((E, 0, 0), ff_dim=1, n_experts=E),
+    }
+    if cfg.moe.shared_experts:
+        p["shared"] = L.mlp_specs(rules)
+    return p
+
+
+def router_topk(logits: jax.Array, k: int, norm_probs: bool):
+    """logits: (..., E) -> (weights (..., k), indices (..., k))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    if norm_probs:  # mixtral/deepseek renormalize the selected gates
+        w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx
+
+
+def moe_apply(params, x, cfg):
+    """Dense-dispatch formulation: one-hot combine weights -> einsum over
+    experts. The expert dim shards over the 'model' axis (EP); XLA turns
+    the dispatch/combine contractions into all-to-alls on that axis —
+    the §3 collective in fused form. O(T·E) routing memory, exact top-k
+    (no capacity drops) — the reference semantics for the EP fast path.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = xt @ params["router"]
+    w, idx = router_topk(logits, m.top_k, m.norm_topk_probs)
+    # combine[t, e] = sum_k w[t,k] * [idx[t,k] == e]
+    combine = jnp.zeros((T, m.num_experts), jnp.float32)
+    onehot = jax.nn.one_hot(idx, m.num_experts, dtype=jnp.float32)  # (T, k, E)
+    combine = (onehot * w[..., None]).sum(axis=1)  # (T, E)
+    # dispatch: every expert sees all tokens weighted by membership.
+    # grouped einsum keeps peak memory at (E, T, ff) tiles XLA can shard.
+    h_in = jnp.einsum("td,edf->etf", xt, params["w_in"])
+    h_gate = jnp.einsum("td,edf->etf", xt, params["w_gate"])
+    h = jax.nn.silu(h_gate) * h_in
+    y_e = jnp.einsum("etf,efd->etd", h, params["w_out"])  # (E, T, d)
+    y = jnp.einsum("etd,te->td", y_e.astype(jnp.float32), combine)
+    y = y.astype(x.dtype)
+    if "shared" in params:
+        y = y + L.mlp_apply(params["shared"], xt)
+    aux = load_balance_loss(logits, idx, m.num_experts, m.top_k)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply_sparse(params, x, cfg, capacity_factor: float | None = None):
+    """Capacity-bounded sparse dispatch (production path): tokens gather
+    into per-expert buffers of size C = cf·T·k/E; overflow drops (standard
+    Switch/Mixtral-style). This is the formulation whose dispatch IS an
+    all-to-all over the EP axis — bound to dragonfly_all_to_all in the
+    shard_map training variant (train/step_dragonfly.py)."""
+    from repro.dist import sharding as SH
+
+    m = cfg.moe
+    if capacity_factor is None:
+        capacity_factor = m.capacity_factor
+    B, S, d = x.shape
+    T = B * S
+    E = m.num_experts
+    C = max(1, int(capacity_factor * T * m.top_k / E))
+    C = -(-C // 16) * 16  # round up so the capacity dim shards evenly
+    # expert-buffer sharding: EP puts experts on the tensor axis and
+    # capacity on the batch axes; the TP fallback (E ∤ axis) shards the
+    # hidden dims instead. Constraints are no-ops outside a launcher.
+    act = SH.active()
+    ep = act is not None and act[0].expert_parallel(E)
+    t_ax = act[0].tensor_axis if act else None
+    b_ax = act[0].batch_axes if act else None
+    xt = x.reshape(T, d)
+    logits = xt @ params["router"]
+    w, idx = router_topk(logits, m.top_k, m.norm_topk_probs)  # (T,k)
+    flat_e = idx.reshape(-1)  # (T*k,)
+    # position of each (t, k) within its expert's buffer
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - 1) * onehot  # (T*k, E)
+    slot = pos_in_e.sum(-1)  # (T*k,)
+    keep = slot < C
+    buf = jnp.zeros((E, C, d), xt.dtype)
+    src_tok = jnp.repeat(jnp.arange(T), m.top_k)
+    buf = buf.at[flat_e, jnp.clip(slot, 0, C - 1)].add(
+        jnp.where(keep[:, None], xt[src_tok], 0)
+    )
+    if act:  # the §3 all-to-all boundary: tokens -> expert-major buffers
+        buf = SH.constrain(buf, t_ax if ep else None, b_ax, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, params["w_in"]
+    )
+    if act:
+        h = SH.constrain(h, t_ax if ep else None, b_ax, None if ep else t_ax)
+    y_buf = jnp.einsum("ecf,efd->ecd", h, params["w_out"])  # (E, C, d)
+    if act:  # combine all-to-all boundary
+        y_buf = SH.constrain(y_buf, t_ax if ep else None, b_ax, None)
+    y = jnp.zeros((T, d), jnp.float32)
+    gathered = y_buf[flat_e, jnp.clip(slot, 0, C - 1)]
+    y = y.at[src_tok].add(
+        jnp.where(keep[:, None], gathered.astype(jnp.float32) * w.reshape(-1)[:, None], 0)
+    )
+    y = y.astype(x.dtype)
+    if "shared" in params:
+        y = y + L.mlp_apply(params["shared"], xt)
+    aux = load_balance_loss(logits, idx, E, m.top_k)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply_ep(params, x, cfg):
+    """Expert-parallel MoE via shard_map: the dispatch/combine are EXPLICIT
+    all-to-alls over the tensor axis — the §3 collective boundary. Used
+    when the active rules report E % model_axis == 0 (deepseek: 256/16,
+    jamba: 16/16); each model shard owns E/n_model experts outright and
+    token buffers travel (E, C_loc, d) -> (E_loc, n_model·C_loc, d).
+
+    The ``--collectives dragonfly`` variant swaps lax.all_to_all for the
+    doubly-parallel ppermute schedule (dist/collectives.py) — same
+    payload, K·M²/s visible rounds (see EXPERIMENTS.md §Perf).
+    """
+    from repro.dist import sharding as SH
+    from jax.sharding import PartitionSpec as PS
+
+    rules, mesh = SH.active()
+    m = cfg.moe
+    E = m.num_experts
+    t_ax = rules.tensor_axis
+    b_ax = rules.batch_axes
+    B, S, d = x.shape
+    n_model = rules.model_axis_size
+    E_loc = E // n_model
+    # tokens shard over BOTH the batch axes and the tensor axis (sequence-
+    # parallel dispatch): each chip routes its own T/(data·model) slice —
+    # without this the model-axis replicas all dispatch identical buffers
+    # and the expert compute is n_model-times redundant.
+    b_axes = b_ax if isinstance(b_ax, tuple) else (b_ax,)
+    tok_axes = (*b_axes, t_ax)
+
+    def local_fn(xt, w_in, w_gate, w_out, router):
+        T_loc = xt.shape[0]
+        logits = xt @ router
+        w, idx = router_topk(logits, m.top_k, m.norm_topk_probs)
+        C_loc = max(8, int(m.capacity_factor * T_loc * m.top_k / E))
+        C_loc = -(-C_loc // 8) * 8
+        flat_e = idx.reshape(-1)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        slot = ((jnp.cumsum(onehot, 0) - 1) * onehot).sum(-1)
+        keep = slot < C_loc
+        src = jnp.repeat(jnp.arange(T_loc), m.top_k)
+        buf = jnp.zeros((E, C_loc, d), xt.dtype)
+        buf = buf.at[flat_e, jnp.clip(slot, 0, C_loc - 1)].add(
+            jnp.where(keep[:, None], xt[src], 0)
+        )
+        # ---- dispatch all-to-all (paper §3 boundary). "dragonfly" uses
+        # the doubly-parallel round schedule (K·M²/s conflict-free rounds
+        # of ppermutes on the D3 view of the axis); "xla" the fused op.
+        buf = buf.reshape(n_model, E_loc, C_loc, d)
+        if rules.moe_collectives == "dragonfly":
+            from repro.dist.collectives import dragonfly_all_to_all
+            from repro.dist.mesh import dragonfly_layout
+
+            layout = dragonfly_layout(n_model)
+            recv = dragonfly_all_to_all(buf, t_ax, layout)
+        else:
+            recv = jax.lax.all_to_all(buf, t_ax, split_axis=0, concat_axis=0)
+        recv = recv.transpose(1, 0, 2, 3).reshape(E_loc, n_model * C_loc, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, w_gate)) * jnp.einsum(
+            "ecd,edf->ecf", recv, w_in
+        )
+        y = jnp.einsum("ecf,efd->ecd", h, w_out)
+        # ---- combine all-to-all
+        y = y.reshape(E_loc, n_model, C_loc, d).transpose(1, 0, 2, 3)
+        if rules.moe_collectives == "dragonfly":
+            back = dragonfly_all_to_all(y, t_ax, layout)
+        else:
+            back = jax.lax.all_to_all(y, t_ax, split_axis=0, concat_axis=0)
+        back = back.reshape(E, C_loc, d)
+        out = jnp.zeros((T_loc, d), xt.dtype)
+        g = back[flat_e, jnp.clip(slot, 0, C_loc - 1)]
+        out = out.at[src].add(
+            jnp.where(keep[:, None], g * w.reshape(-1)[:, None].astype(g.dtype), 0)
+        )
+        aux = jax.lax.pmean(load_balance_loss(logits, idx, E, m.top_k), tok_axes)
+        return out.astype(xt.dtype), aux
+
+    xt = x.reshape(B * S, d)
+    out, aux = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            PS(tok_axes, None),
+            PS(t_ax, None, None),
+            PS(t_ax, None, None),
+            PS(t_ax, None, None),
+            PS(None, None),
+        ),
+        out_specs=(PS(tok_axes, None), PS()),
+        check_vma=False,
+    )(xt, params["w_in"], params["w_gate"], params["w_out"], params["router"])
+    y = out
+    if "shared" in params:
+        y = y + L.mlp_apply(params["shared"], xt)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply_tp(params, x, cfg):
+    """TP-experts shard_map path (E ∤ tensor axis, e.g. mixtral's 8 on a
+    16-wide axis): experts replicated, their FFN dims sharded over the
+    tensor axis; dispatch is LOCAL (per data shard), the only collective
+    is the per-layer psum of the d-dim partial outputs — no token
+    all-gather (the pjit sparse path's scatter pulled the full global
+    token set to every chip; see EXPERIMENTS.md §Perf cell A, iter 1)."""
+    from repro.dist import sharding as SH
+    from jax.sharding import PartitionSpec as PS
+
+    rules, mesh = SH.active()
+    m = cfg.moe
+    E = m.num_experts
+    t_ax = rules.tensor_axis
+    b_ax = rules.batch_axes
+    B, S, d = x.shape
+    b_axes = b_ax if isinstance(b_ax, tuple) else (b_ax,)
+
+    def local_fn(xt, w_in, w_gate, w_out, router):
+        T_loc = xt.shape[0]
+        logits = xt @ router
+        w, idx = router_topk(logits, m.top_k, m.norm_topk_probs)
+        C_loc = max(8, int(m.capacity_factor * T_loc * m.top_k / E))
+        C_loc = -(-C_loc // 8) * 8
+        flat_e = idx.reshape(-1)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        slot = ((jnp.cumsum(onehot, 0) - 1) * onehot).sum(-1)
+        keep = slot < C_loc
+        src = jnp.repeat(jnp.arange(T_loc), m.top_k)
+        buf = jnp.zeros((E, C_loc, d), xt.dtype)
+        buf = buf.at[flat_e, jnp.clip(slot, 0, C_loc - 1)].add(
+            jnp.where(keep[:, None], xt[src], 0)
+        )
+        # w_in/w_gate local: (E, d, f/n); w_out local: (E, f/n, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * jnp.einsum(
+            "ecd,edf->ecf", buf, w_in
+        )
+        y_part = jnp.einsum("ecf,efd->ecd", h, w_out)  # partial over ff shards
+        y_buf = jax.lax.psum(y_part.astype(xt.dtype), t_ax)
+        out = jnp.zeros((T_loc, d), xt.dtype)
+        g = y_buf[flat_e, jnp.clip(slot, 0, C_loc - 1)].astype(xt.dtype)
+        out = out.at[src].add(
+            jnp.where(keep[:, None], g * w.reshape(-1)[:, None].astype(g.dtype), 0)
+        )
+        aux = jax.lax.pmean(load_balance_loss(logits, idx, E, m.top_k), b_axes)
+        return out.astype(xt.dtype), aux
+
+    xt = x.reshape(B * S, d)
+    out, aux = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            PS(b_ax, None),
+            PS(None, None, t_ax),
+            PS(None, None, t_ax),
+            PS(None, t_ax, None),
+            PS(None, None),
+        ),
+        out_specs=(PS(b_ax, None), PS()),
+        check_vma=False,
+    )(xt, params["w_in"], params["w_gate"], params["w_out"], params["router"])
+    y = out
+    if "shared" in params:
+        y = y + L.mlp_apply(params["shared"], xt)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply_auto(params, x, cfg):
+    """Pick the shard_map path matching the expert layout when a launcher
+    registered rules; otherwise the sparse pjit path (single device)."""
+    from repro.dist import sharding as SH
+
+    act = SH.active()
+    if act is not None:
+        rules = act[0]
+        T = x.shape[0] * x.shape[1]
+        if rules.expert_parallel(cfg.moe.num_experts):
+            if T % (rules.model_axis_size * rules.data_axis_size) == 0:
+                return moe_apply_ep(params, x, cfg)
+        elif T % rules.data_axis_size == 0:
+            return moe_apply_tp(params, x, cfg)
+    return moe_apply_sparse(params, x, cfg)
+
+
+def load_balance_loss(logits, idx, E, k):
+    """Switch-style aux loss: E · Σ_e f_e · p_e."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    p_mean = probs.mean(axis=0)
+    f = jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(axis=(0, 1)) / (idx.shape[0] * k)
+    return E * jnp.sum(f * p_mean)

@@ -1,0 +1,280 @@
+"""Composable decoder: blocks = mixer (attn/mamba/mLSTM/sLSTM) + optional
+FFN (dense MLP / MoE), pre-norm residual. Layers are stacked as repeating
+GROUPS (the arch's block pattern period) and scanned with lax.scan +
+jax.checkpoint — one trace per distinct member, n_layers/period iterations.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import mamba as MB
+from repro.models import xlstm as XL
+
+
+# ------------------------------------------------------------ one member
+def member_init(key, cfg, mixer: str, ffn: str, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": L.make_norm(cfg.norm, cfg.d_model, dtype)[0]}
+    if mixer == "attn":
+        p["mixer"] = A.mla_init(k1, cfg, dtype) if cfg.attention == "mla" else A.gqa_init(k1, cfg, dtype)
+    elif mixer == "mamba":
+        p["mixer"] = MB.mamba_init(k1, cfg, dtype)
+    elif mixer == "mlstm":
+        p["mixer"] = XL.mlstm_init(k1, cfg, dtype)
+    elif mixer == "slstm":
+        p["mixer"] = XL.slstm_init(k1, cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    if ffn != "none":
+        p["norm2"] = L.make_norm(cfg.norm, cfg.d_model, dtype)[0]
+        p["ffn"] = MOE.moe_init(k2, cfg, dtype) if ffn == "moe" else L.mlp_init(
+            k2, cfg.d_model, cfg.d_ff, dtype, gated=cfg.mlp_gated
+        )
+    return p
+
+
+def member_specs(cfg, rules, mixer: str, ffn: str):
+    s = {"norm1": L.norm_specs(cfg.norm)}
+    if mixer == "attn":
+        s["mixer"] = A.mla_specs(cfg, rules) if cfg.attention == "mla" else A.gqa_specs(cfg, rules)
+    elif mixer == "mamba":
+        s["mixer"] = MB.mamba_specs(cfg, rules)
+    elif mixer == "mlstm":
+        s["mixer"] = XL.mlstm_specs(cfg, rules)
+    elif mixer == "slstm":
+        s["mixer"] = XL.slstm_specs(cfg, rules)
+    if ffn != "none":
+        s["norm2"] = L.norm_specs(cfg.norm)
+        s["ffn"] = MOE.moe_specs(cfg, rules) if ffn == "moe" else L.mlp_specs(
+            rules, gated=cfg.mlp_gated
+        )
+    return s
+
+
+def _norm(cfg):
+    return L.rmsnorm if cfg.norm == "rmsnorm" else L.layernorm
+
+
+def member_train(params, x, cfg, mixer, ffn, positions, mrope_positions, use_kernel):
+    from repro.dist import sharding as SH
+
+    act = SH.active()
+    if act is not None and act[0].seq_parallel:
+        # sequence parallelism: residual stream sharded over the tensor
+        # axis between blocks — XLA turns the TP all-reduces into
+        # reduce-scatter + all-gather pairs (half the collective bytes).
+        x = SH.constrain(x, act[0].batch_axes, act[0].tensor_axis, None)
+    norm = _norm(cfg)
+    h = norm(params["norm1"], x)
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            mx = A.mla_train(params["mixer"], h, cfg, positions, use_kernel=use_kernel)
+        else:
+            mx = A.gqa_train(params["mixer"], h, cfg, positions, mrope_positions, use_kernel)
+    elif mixer == "mamba":
+        mx = MB.mamba_train(params["mixer"], h, cfg)
+    elif mixer == "mlstm":
+        mx = XL.mlstm_train(params["mixer"], h, cfg)
+    else:
+        mx = XL.slstm_train(params["mixer"], h, cfg)
+    x = x + mx
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h2 = norm(params["norm2"], x)
+        if ffn == "moe":
+            y, aux = MOE.moe_apply_auto(params["ffn"], h2, cfg)
+        else:
+            y = L.mlp_apply(
+                params["ffn"], h2, act=jax.nn.silu if cfg.mlp_gated else jax.nn.gelu
+            )
+        x = x + y
+    return x, aux
+
+
+def member_decode(params, x, cache, cfg, mixer, ffn, position, mrope_positions):
+    norm = _norm(cfg)
+    h = norm(params["norm1"], x)
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            mx, cache = A.mla_decode(params["mixer"], h, cache, cfg, position)
+        else:
+            mx, cache = A.gqa_decode(params["mixer"], h, cache, cfg, position, mrope_positions)
+    elif mixer == "mamba":
+        mx, cache = MB.mamba_decode(params["mixer"], h, cache, cfg)
+    elif mixer == "mlstm":
+        mx, cache = XL.mlstm_decode(params["mixer"], h, cache, cfg)
+    else:
+        mx, cache = XL.slstm_decode(params["mixer"], h, cache, cfg)
+    x = x + mx
+    if ffn != "none":
+        h2 = norm(params["norm2"], x)
+        if ffn == "moe":
+            y, _ = MOE.moe_apply_auto(params["ffn"], h2, cfg)
+        else:
+            y = L.mlp_apply(
+                params["ffn"], h2, act=jax.nn.silu if cfg.mlp_gated else jax.nn.gelu
+            )
+        x = x + y
+    return x, cache
+
+
+def member_cache_init(cfg, mixer, batch, max_seq, dtype):
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            return A.mla_cache_init(cfg, batch, max_seq, dtype)
+        return A.gqa_cache_init(cfg, batch, max_seq, dtype)
+    if mixer == "mamba":
+        return MB.mamba_state_init(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return XL.mlstm_state_init(cfg, batch, dtype)
+    return XL.slstm_state_init(cfg, batch, dtype)
+
+
+# -------------------------------------------------------------- the stack
+def stack_init(key, cfg, dtype):
+    """Returns a tuple (one entry per group member) of param trees stacked
+    over the n_groups axis (leading dim)."""
+    pattern = cfg.layer_kinds()
+    period = len(pattern)
+    n_groups = cfg.n_groups  # excludes the dense prefix (deepseek)
+    members = []
+    for mi, (mixer, ffn) in enumerate(pattern):
+        per_group = [
+            member_init(jax.random.fold_in(key, g * period + mi), cfg, mixer, ffn, dtype)
+            for g in range(n_groups)
+        ]
+        members.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group))
+    return tuple(members)
+
+
+def stack_specs(cfg, rules):
+    pattern = cfg.layer_kinds()
+
+    def add_lead(spec):
+        return P(None, *spec)
+
+    return tuple(
+        jax.tree.map(
+            add_lead,
+            member_specs(cfg, rules, mixer, ffn),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        for mixer, ffn in pattern
+    )
+
+
+def stack_train(stack_params, x, cfg, positions, mrope_positions=None, use_kernel=True,
+                remat: bool = True, unroll: bool = False):
+    pattern = cfg.layer_kinds()
+
+    def group_fn(x, group_params):
+        aux_total = jnp.zeros((), jnp.float32)
+        for mi, (mixer, ffn) in enumerate(pattern):
+            x, aux = member_train(
+                group_params[mi], x, cfg, mixer, ffn, positions, mrope_positions, use_kernel
+            )
+            aux_total += aux
+        return x, aux_total
+
+    if remat:
+        group_fn = jax.checkpoint(group_fn)
+
+    if unroll:
+        # Python loop over groups — used by the dry-run's cost-analysis
+        # compiles (XLA counts while-loop bodies once; unrolling makes
+        # flops/bytes scale with depth so per-group deltas are exact).
+        aux_total = jnp.zeros((), jnp.float32)
+        for g in range(cfg.n_groups):
+            group = jax.tree.map(lambda a: a[g], stack_params)
+            x, aux = group_fn(x, group)
+            aux_total += aux
+        return x, aux_total
+
+    x, auxs = jax.lax.scan(group_fn, x, stack_params)
+    return x, auxs.sum()
+
+
+def stack_decode(stack_params, x, caches, cfg, position, mrope_positions=None,
+                 unroll: bool = False):
+    pattern = cfg.layer_kinds()
+
+    def group_fn(x, inputs):
+        group_params, group_cache = inputs
+        new_caches = []
+        for mi, (mixer, ffn) in enumerate(pattern):
+            x, nc = member_decode(
+                group_params[mi], x, group_cache[mi], cfg, mixer, ffn, position, mrope_positions
+            )
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if unroll:
+        outs = []
+        for g in range(cfg.n_groups):
+            sel = lambda a: a[g]
+            x, nc = group_fn(x, (jax.tree.map(sel, stack_params), jax.tree.map(sel, caches)))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(group_fn, x, (stack_params, caches))
+    return x, new_caches
+
+
+def stack_cache_init(cfg, batch, max_seq, dtype):
+    pattern = cfg.layer_kinds()
+    n_groups = cfg.n_groups
+    caches = []
+    for mixer, _ in pattern:
+        one = member_cache_init(cfg, mixer, batch, max_seq, dtype)
+        caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (n_groups, *a.shape)), one))
+    return tuple(caches)
+
+
+def stack_cache_specs(cfg, rules, long_context: bool):
+    """Decode caches are SEQUENCE-sharded over the tensor axis (kv-head
+    counts like 8 don't divide a 16-wide model axis; seq always does).
+    Recurrent states shard their inner/feature dims instead."""
+    pattern = cfg.layer_kinds()
+    b = rules.batch_axes
+    t = rules.tensor_axis
+    specs = []
+    for mixer, _ in pattern:
+        if mixer == "attn":
+            if cfg.attention == "mla":
+                specs.append({
+                    "c_kv": P(None, b, t, None),     # (G, B, S, r)
+                    "k_rope": P(None, b, t, None),
+                })
+            else:
+                specs.append({
+                    "k": P(None, b, None, t, None),  # (G, B, kvh, S, hd)
+                    "v": P(None, b, None, t, None),
+                })
+        elif mixer == "mamba":
+            specs.append({
+                "conv": P(None, b, None, t),  # (G, B, d_conv-1, di)
+                "ssm": P(None, b, t, None),   # (G, B, di, N)
+            })
+        elif mixer == "mlstm":
+            specs.append({
+                "C": P(None, b, None, t, None),  # (G, B, H, dh, dh)
+                "n": P(None, b, None, t),
+                "m": P(None, b, None),
+            })
+        else:  # slstm: (G, B, d)
+            specs.append({
+                "c": P(None, b, t),
+                "n": P(None, b, t),
+                "h": P(None, b, t),
+                "m": P(None, b, t),
+            })
+    return tuple(specs)

@@ -1,0 +1,277 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, attention-like
+parallel form) and sLSTM (scalar memory, sequential scan).
+
+xlstm-1.3b uses an [m:s] interleave (7 mLSTM : 1 sLSTM per group of 8).
+Decode is O(1): mLSTM carries (C, n, m_state) per head; sLSTM (c, n, h, m).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------- mLSTM
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    pf = cfg.xlstm.proj_factor_mlstm
+    dp = int(pf * d)
+    dh = dp // H
+    # q/k/v are BLOCK-DIAGONAL per head (xLSTM paper's BlockLinear) —
+    # (H, dh, dh) instead of (dp, dp): 1/H the parameters and FLOPs.
+    return {
+        "w_up": L.truncated_normal(ks[0], (d, 2 * dp), dtype, s),  # x and gate
+        "wq": L.truncated_normal(ks[1], (H, dh, dh), dtype, dh ** -0.5),
+        "wk": L.truncated_normal(ks[2], (H, dh, dh), dtype, dh ** -0.5),
+        "wv": L.truncated_normal(ks[3], (H, dh, dh), dtype, dh ** -0.5),
+        "w_if": L.truncated_normal(ks[4], (dp, 2 * cfg.n_heads), dtype, dp ** -0.5),
+        "b_if": jnp.zeros((2 * cfg.n_heads,), dtype),
+        "ogate_norm": L.rmsnorm_init(dp, dtype),
+        "w_down": L.truncated_normal(ks[5], (dp, d), dtype, dp ** -0.5),
+    }
+
+
+def mlstm_specs(cfg, rules):
+    t = rules.tensor_axis
+    return {
+        "w_up": P(None, t),
+        # block-diagonal per-head weights: head count (4) is below the
+        # tensor-axis cardinality, so these stay replicated (ZeRO shards
+        # their optimizer state over the data axes instead).
+        "wq": P(None, None, None),
+        "wk": P(None, None, None),
+        "wv": P(None, None, None),
+        "w_if": P(t, None),
+        "b_if": P(None),
+        "ogate_norm": {"scale": P(None)},
+        "w_down": P(t, None),
+    }
+
+
+def _mlstm_heads(params, xu, cfg):
+    dp = xu.shape[-1]
+    H = cfg.n_heads
+    dh = dp // H
+    xh = xu.reshape(*xu.shape[:-1], H, dh)
+    q = jnp.einsum("...hd,hde->...he", xh, params["wq"])
+    k = jnp.einsum("...hd,hde->...he", xh, params["wk"]) * (dh ** -0.5)
+    v = jnp.einsum("...hd,hde->...he", xh, params["wv"])
+    if_ = xu @ params["w_if"] + params["b_if"]
+    i_pre, f_pre = jnp.split(if_, 2, axis=-1)  # (..., H)
+    return q, k, v, i_pre.astype(jnp.float32), f_pre.astype(jnp.float32)
+
+
+def mlstm_parallel_inner(q, k, v, i_pre, f_pre):
+    """Quadratic stabilized parallel form — reference/oracle and the
+    intra-chunk compute of the chunkwise form. Shapes (B,S,H,·)."""
+    B, S, H, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_pre)  # (B,S,H)
+    F = jnp.cumsum(logf, axis=1)
+    Dmat = F[:, :, None, :] - F[:, None, :, :] + i_pre[:, None, :, :]  # (B,S,S,H)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    Dmat = jnp.where(mask[None, :, :, None], Dmat, -jnp.inf)
+    m_state = jnp.max(Dmat, axis=2)  # (B,S,H)
+    Dw = jnp.exp(Dmat - m_state[:, :, None, :])
+    scores = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32), k.astype(jnp.float32))
+    w = scores * Dw
+    denom = jnp.abs(w.sum(2)) + jnp.exp(-m_state)  # (B,S,H)
+    hnum = jnp.einsum("btsh,bshd->bthd", w, v.astype(jnp.float32))
+    return hnum / jnp.maximum(denom, 1.0)[..., None]
+
+
+def mlstm_chunked_inner(q, k, v, i_pre, f_pre, chunk: int):
+    """Chunkwise-parallel mLSTM (xLSTM's training form): scan over chunks
+    carrying the recurrent (C, n, m) state; quadratic only within a chunk.
+    Peak score tile is (B, c, c, H) instead of (B, S, S, H).
+
+    Exactness: equals the fully-parallel form up to the stabilizer (the
+    running max is per-chunk-prefix rather than per-row over the full
+    past, a monotone refinement of the same max — results match to fp
+    tolerance; see tests/test_xlstm_forms.py)."""
+    B, S, H, dh = q.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    qc = jnp.moveaxis(q.reshape(B, nc, chunk, H, dh), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nc, chunk, H, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, chunk, H, dh), 1, 0)
+    ic = jnp.moveaxis(i_pre.reshape(B, nc, chunk, H), 1, 0)
+    fc = jnp.moveaxis(f_pre.reshape(B, nc, chunk, H), 1, 0)
+
+    def step(carry, inp):
+        C, n, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qq, kk, vv, ii, ff = inp  # (B,c,H,·)
+        logf = jax.nn.log_sigmoid(ff.astype(jnp.float32))  # (B,c,H)
+        F = jnp.cumsum(logf, axis=1)  # within-chunk cumulative
+        Ftot = F[:, -1]  # (B,H)
+        # stabilizer per row: max(inter m + F_t, intra max)
+        Dmat = F[:, :, None, :] - F[:, None, :, :] + ii[:, None, :, :].astype(jnp.float32)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Dmat = jnp.where(mask[None, :, :, None], Dmat, -jnp.inf)
+        m_intra = jnp.max(Dmat, axis=2)  # (B,c,H)
+        m_inter = m[:, None, :] + F  # (B,c,H)
+        m_row = jnp.maximum(m_intra, m_inter)
+        Dw = jnp.exp(Dmat - m_row[:, :, None, :])
+        qf = qq.astype(jnp.float32)
+        kf = kk.astype(jnp.float32)
+        vf = vv.astype(jnp.float32)
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf)
+        w = scores * Dw
+        intra_num = jnp.einsum("btsh,bshd->bthd", w, vf)
+        intra_den = w.sum(2)  # (B,c,H)
+        inter_w = jnp.exp(m_inter - m_row)  # (B,c,H)
+        inter_num = jnp.einsum("bthd,bhde->bthe", qf, C) * inter_w[..., None]
+        inter_den = jnp.einsum("bthd,bhd->bth", qf, n) * inter_w
+        den = jnp.abs(intra_den + inter_den) + jnp.exp(-m_row)
+        h = (intra_num + inter_num) / jnp.maximum(den, 1.0)[..., None]
+        # ---- state update to end of chunk: new stabilizer is the max of
+        # (carried max, decayed to chunk end) and the chunk's own keys'
+        # (Ftot - F_s + i_s)
+        m_new = jnp.maximum(
+            m + Ftot, jnp.max(Ftot[:, None] - F + ii.astype(jnp.float32), axis=1)
+        )
+        # decay for keys within chunk: from position s to chunk end:
+        # Ftot - F_s + i_s, stabilized by m_new
+        kw = jnp.exp(Ftot[:, None] - F + ii.astype(jnp.float32) - m_new[:, None])  # (B,c,H)
+        C_new = C * jnp.exp(m + Ftot - m_new)[..., None, None] + jnp.einsum(
+            "bshd,bshe,bsh->bhde", kf, vf, kw
+        )
+        n_new = n * jnp.exp(m + Ftot - m_new)[..., None] + jnp.einsum(
+            "bshd,bsh->bhd", kf, kw
+        )
+        return (C_new, n_new, m_new), h
+
+    init = (
+        jnp.zeros((B, H, dh, dh), jnp.float32),
+        jnp.zeros((B, H, dh), jnp.float32),
+        jnp.full((B, H), 0.0, jnp.float32),
+    )
+    _, hs = jax.lax.scan(step, init, (qc, kc, vc, ic, fc))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dh)
+
+
+def mlstm_train(params, x, cfg, chunk: int = 256):
+    """Chunkwise-parallel mLSTM block."""
+    B, S, d = x.shape
+    xz = x @ params["w_up"]
+    xu, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_heads(params, xu, cfg)
+    if S <= chunk:
+        h = mlstm_parallel_inner(q, k, v, i_pre, f_pre)
+    else:
+        h = mlstm_chunked_inner(q, k, v, i_pre, f_pre, chunk)
+    h = h.reshape(B, S, -1).astype(x.dtype)
+    h = L.rmsnorm(params["ogate_norm"], h) * jax.nn.silu(z)
+    return h @ params["w_down"]
+
+
+def mlstm_decode(params, x, state, cfg):
+    """state: {'C': (B,H,dh,dh), 'n': (B,H,dh), 'm': (B,H)}."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    xz = x[:, 0] @ params["w_up"]
+    xu, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_heads(params, xu, cfg)
+    logf = jax.nn.log_sigmoid(f_pre)  # (B,H)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    fw = jnp.exp(logf + state["m"] - m_new)[..., None]
+    iw = jnp.exp(i_pre - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = state["C"].astype(jnp.float32) * fw[..., None] + iw[..., None] * (
+        kf[..., :, None] * vf[..., None, :]
+    )
+    n = state["n"].astype(jnp.float32) * fw + iw * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)) + jnp.exp(-m_new)
+    h = (num / jnp.maximum(den, 1.0)[..., None]).reshape(B, -1).astype(x.dtype)
+    h = L.rmsnorm(params["ogate_norm"], h) * jax.nn.silu(z)
+    out = (h @ params["w_down"])[:, None]
+    return out, {"C": C.astype(state["C"].dtype), "n": n.astype(state["n"].dtype), "m": m_new}
+
+
+def mlstm_state_init(cfg, batch, dtype):
+    H = cfg.n_heads
+    dp = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    dh = dp // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), dtype),
+        "n": jnp.zeros((batch, H, dh), dtype),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------- sLSTM
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    return {
+        "w_gates": L.truncated_normal(ks[0], (d, 4 * d), dtype, s),  # i,f,z,o
+        "r_gates": L.truncated_normal(ks[1], (d, 4 * d), dtype, s * 0.5),
+        "b_gates": jnp.zeros((4 * d,), dtype),
+        "w_out": L.truncated_normal(ks[2], (d, d), dtype, s),
+    }
+
+
+def slstm_specs(cfg, rules):
+    t = rules.tensor_axis
+    return {
+        "w_gates": P(None, t),
+        "r_gates": P(None, t),
+        "b_gates": P(t),
+        "w_out": P(t, None),
+    }
+
+
+def _slstm_step(params, carry, xt):
+    """carry: (c, n, h, m) each (B, d) fp32; xt: (B, d)."""
+    c, n, h, m = carry
+    gates = (
+        xt @ params["w_gates"] + h.astype(xt.dtype) @ params["r_gates"] + params["b_gates"]
+    ).astype(jnp.float32)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(gates, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    iw = jnp.exp(i_pre - m_new)
+    fw = jnp.exp(logf + m - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c_new = fw * c + iw * z
+    n_new = fw * n + iw
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_train(params, x, cfg):
+    B, S, d = x.shape
+    init = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+
+    def step(carry, xt):
+        return _slstm_step(params, carry, xt)
+
+    _, hs = jax.lax.scan(step, init, x.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    return h @ params["w_out"]
+
+
+def slstm_decode(params, x, state, cfg):
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, h = _slstm_step(params, carry, x[:, 0])
+    out = (h.astype(x.dtype) @ params["w_out"])[:, None]
+    c, n, hh, m = carry
+    return out, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_state_init(cfg, batch, dtype):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": z()}

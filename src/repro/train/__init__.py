@@ -1,0 +1,20 @@
+"""Training substrate: optimizer, train step factory, checkpointing,
+data pipeline, fault tolerance, gradient compression."""
+
+from repro.train.optimizer import OptConfig, init_state, apply_updates
+from repro.train.train_step import TrainSettings, make_train_step, init_train_state, train_shardings
+from repro.train import checkpoint
+from repro.train.data import DataState, SyntheticLM
+
+__all__ = [
+    "OptConfig",
+    "init_state",
+    "apply_updates",
+    "TrainSettings",
+    "make_train_step",
+    "init_train_state",
+    "train_shardings",
+    "checkpoint",
+    "DataState",
+    "SyntheticLM",
+]

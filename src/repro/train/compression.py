@@ -1,0 +1,71 @@
+"""Gradient compression: int8 block quantization with error feedback.
+
+Composes with the A3 all-reduce: quantize -> all-reduce int8 (4× fewer
+bytes on the wire) -> dequantize; the residual (quantization error) is
+carried into the next step's gradient (error feedback keeps convergence).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """-> (int8 codes (nblocks, BLOCK), fp32 scales (nblocks,))."""
+    flat, n = _pad_to_block(g.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, shape, size) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def compress_tree(grads, err):
+    """Error-feedback quantization over a gradient pytree.
+
+    Returns (codes_tree, new_err_tree) where codes are (q, scale) pairs.
+    """
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        deq = dequantize(q, s, g.shape, g.size)
+        return (q, s), corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    pairs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    codes = jax.tree.unflatten(tdef, [p[0] for p in pairs])
+    new_err = jax.tree.unflatten(tdef, [p[1] for p in pairs])
+    return codes, new_err
+
+
+def decompress_tree(codes, like):
+    flat_c, tdef = jax.tree.flatten(like)
+    flat_codes = jax.tree.unflatten(jax.tree.structure(like), jax.tree.leaves(codes, is_leaf=lambda x: isinstance(x, tuple)))
+    # simpler: walk in parallel
+    def leaf(code, g):
+        q, s = code
+        return dequantize(q, s, g.shape, g.size).astype(g.dtype)
+
+    return jax.tree.map(
+        leaf, codes, like, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+    )
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,61 @@
+"""Fault tolerance & elasticity.
+
+* Failure handling: on detected chip/host loss, remap to the largest
+  embeddable D3(J, L) subnetwork (paper Property 2 — core/emulation.py),
+  rebuild the mesh and re-shard from the latest checkpoint.
+* Straggler mitigation: deadline-based microbatch accounting — rounds are
+  deterministic (the paper's conflict-free schedules have no stochastic
+  congestion), so a late participant is detected by round index; the
+  runner drops the straggler's microbatch and renormalizes the gradient.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core.topology import D3, Router
+from repro.core.emulation import largest_embeddable, embed
+from repro.dist.mesh import DeviceLayout
+
+
+@dataclasses.dataclass
+class ClusterState:
+    layout: DeviceLayout
+    dead: set = dataclasses.field(default_factory=set)
+
+    def fail(self, device_index: int):
+        self.dead.add(self.layout.topo.id_router(device_index))
+
+    def plan_recovery(self):
+        """-> (new_layout, device_index_map old->new) after failures."""
+        J, L, c_set, p_set = largest_embeddable(self.layout.topo, self.dead)
+        emb = embed(self.layout.topo, J, L, c_set=c_set, p_set=p_set)
+        new_layout = DeviceLayout(emb.guest)
+        index_map = {
+            emb.guest.router_id(r): self.layout.topo.router_id(emb.map_router(r))
+            for r in emb.guest.routers()
+        }
+        return new_layout, index_map
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    deadline_factor: float = 3.0   # × median step time
+    min_participants: float = 0.75  # refuse to proceed below this fraction
+
+    def judge(self, durations_s: list[float]) -> list[bool]:
+        """True = keep, False = drop (straggler)."""
+        if not durations_s:
+            return []
+        med = sorted(durations_s)[len(durations_s) // 2]
+        keep = [d <= self.deadline_factor * max(med, 1e-9) for d in durations_s]
+        if sum(keep) < self.min_participants * len(keep):
+            # too many stragglers: likely a systemic stall — keep everyone
+            return [True] * len(keep)
+        return keep
+
+
+def renormalized_scale(kept: int, total: int) -> float:
+    """Gradient renormalization when microbatches are dropped."""
+    return total / max(kept, 1)

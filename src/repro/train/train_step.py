@@ -1,0 +1,127 @@
+"""Training step factory: loss -> grads (with microbatch accumulation) ->
+optional int8 error-feedback compression -> AdamW/AdaFactor update.
+
+The returned function is pjit-ready: pair it with the sharding trees from
+``train_shardings`` and XLA inserts the collectives (the dragonfly-
+scheduled variant lives in the shard_map path, step_dragonfly)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.train import optimizer as O
+from repro.train import compression as C
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    microbatches: int = 1          # gradient accumulation steps
+    use_kernel: bool = True
+    remat: bool = True
+    compress_grads: bool = False   # int8 + error feedback
+    unroll: bool = False           # unroll layer groups (cost-analysis compiles)
+
+
+def make_train_step(cfg, opt_cfg: O.OptConfig, settings: TrainSettings):
+    """-> train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch leading dim = global batch; microbatching splits it on-device
+    (scan over accumulation steps keeps the compile size constant)."""
+
+    def loss_of(p, mb):
+        return M.loss_fn(
+            p, mb, cfg, use_kernel=settings.use_kernel, remat=settings.remat,
+            unroll=settings.unroll,
+        )
+
+    def grads_of(p, batch):
+        if settings.microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(p, batch)
+            return loss, metrics, grads
+
+        mb_n = settings.microbatches
+
+        def split(name, x):
+            if name == "mrope_positions":  # (3, B, S): batch on axis 1
+                return x.reshape(3, mb_n, -1, *x.shape[2:]).swapaxes(0, 1)
+            return x.reshape(mb_n, -1, *x.shape[1:])
+
+        mbs = {k: split(k, v) for k, v in batch.items()}
+        zero_g = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+
+        def acc_fn(carry, mb):
+            g_acc, loss_acc = carry
+            (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(p, mb)
+            g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+            return (g_acc, loss_acc + loss), metrics
+
+        (g_sum, loss_sum), metrics = jax.lax.scan(acc_fn, (zero_g, 0.0), mbs)
+        grads = jax.tree.map(lambda g: g / mb_n, g_sum)
+        last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / mb_n, last_metrics, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        if settings.compress_grads:
+            codes, new_err = C.compress_tree(grads, opt_state["err"])
+            grads = C.decompress_tree(codes, grads)
+            opt_state = dict(opt_state, err=new_err)
+        inner = {k: v for k, v in opt_state.items() if k != "err"}
+        params, inner, opt_metrics = O.apply_updates(params, grads, inner, cfg=opt_cfg)
+        new_state = dict(inner)
+        if settings.compress_grads:
+            new_state["err"] = opt_state["err"]
+        metrics = dict(metrics, **opt_metrics)
+        metrics["loss"] = loss  # microbatch-averaged (not last-microbatch)
+        return params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg, opt_cfg: O.OptConfig, settings: TrainSettings):
+    params = M.init_params(key, cfg)
+    opt_state = O.init_state(params, opt_cfg)
+    if settings.compress_grads:
+        opt_state = dict(opt_state, err=C.init_error(params))
+    return params, opt_state
+
+
+def train_shardings(cfg, rules, opt_cfg: O.OptConfig, settings: TrainSettings):
+    """(param_specs, opt_specs, batch_specs, metric_specs) for pjit."""
+    pspecs = M.param_specs(cfg, rules)
+    params_shapes = jax.eval_shape(lambda: M.init_params(jax.random.key(0), cfg))
+
+    def zero_tree(specs):
+        return jax.tree.map(
+            lambda sp, sh: rules._maybe_fsdp(sp, sh.shape, zero=True),
+            specs, params_shapes, is_leaf=lambda x: isinstance(x, P),
+        )
+
+    if rules.fsdp:
+        # ZeRO-3: params themselves sharded over the data axes too
+        pspecs = zero_tree(pspecs)
+        ospecs = O.state_specs(pspecs, opt_cfg, param_shapes=params_shapes)
+    elif getattr(rules, "zero1", False):
+        # ZeRO-1: optimizer state sharded over the data axes; params TP-only
+        ospecs = O.state_specs(zero_tree(pspecs), opt_cfg, param_shapes=params_shapes)
+    else:
+        ospecs = O.state_specs(pspecs, opt_cfg, param_shapes=params_shapes)
+    if settings.compress_grads:
+        ospecs = dict(ospecs, err=pspecs)
+    bspecs = {}
+    if cfg.embeds_input:
+        bspecs["embeds"] = rules.activations()
+        bspecs["labels"] = rules.tokens()
+    else:
+        bspecs["tokens"] = rules.tokens()
+        bspecs["labels"] = rules.tokens()
+    if cfg.rope == "mrope":
+        bspecs["mrope_positions"] = P(None, rules.batch_axes, None)
+    mspecs = None  # metrics replicated
+    return pspecs, ospecs, bspecs, mspecs

@@ -1,0 +1,104 @@
+"""Theorem 3 — doubly-parallel all-to-all on D3(ks, ms)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import D3
+from repro.core.routing import vector_dest
+from repro.core.simulator import check_vector_round
+from repro.core import alltoall as a2a
+
+
+CASES = [a2a.DAParams(2, 4, 2), a2a.DAParams(4, 6, 2), a2a.DAParams(3, 3, 3), a2a.DAParams(6, 9, 3)]
+
+
+@pytest.mark.parametrize("p", CASES, ids=lambda p: f"K{p.K}M{p.M}s{p.s}")
+def test_round_count_theorem3(p):
+    rs = list(a2a.rounds(p))
+    assert len(rs) == p.total_rounds == p.K * p.M * p.M // p.s
+    assert all(len(vs) == p.s for _, vs in rs)
+
+
+@pytest.mark.parametrize("p", CASES, ids=lambda p: f"K{p.K}M{p.M}s{p.s}")
+def test_vector_coverage(p):
+    """Every (γ,π,δ) used exactly once => all-to-all completeness."""
+    a2a.verify_vector_coverage(p)
+
+
+@pytest.mark.parametrize("p", CASES[:3], ids=lambda p: f"K{p.K}M{p.M}s{p.s}")
+def test_rounds_conflict_free(p):
+    """Each round: every router sends all s vectors simultaneously; the
+    generalized Property 3 guarantees zero link conflicts."""
+    topo = D3(p.K, p.M)
+    routers = list(topo.routers())
+    for key, vecs in a2a.rounds(p):
+        # within-round disagreement (the DA property)
+        gs = [v[0] for v in vecs]
+        ps = [v[1] for v in vecs]
+        ds = [v[2] for v in vecs]
+        assert len(set(gs)) == p.s and len(set(ps)) == p.s and len(set(ds)) == p.s, key
+        sends = [(r, v) for v in vecs for r in routers]
+        conflicts, _ = check_vector_round(topo, sends)
+        assert conflicts == [], (key, conflicts[:2])
+
+
+def test_delivery_completeness_small():
+    """Actually move data: after all rounds every router holds exactly one
+    chunk from every source."""
+    p = a2a.DAParams(2, 4, 2)
+    topo = D3(p.K, p.M)
+    n = topo.num_routers
+    received = {r: set() for r in topo.routers()}
+    for _, vecs in a2a.rounds(p):
+        for v in vecs:
+            for src in topo.routers():
+                received[vector_dest(topo, src, v)].add(src)
+    for r, srcs in received.items():
+        assert len(srcs) == n, r
+
+
+@pytest.mark.parametrize("p", CASES, ids=lambda p: f"K{p.K}M{p.M}s{p.s}")
+def test_pipeline_schedules(p):
+    """Measured pipeline costs: schedule 3 conflict-free with zero delays,
+    schedule 1 delays ~= paper's KM count, makespans track the formulas."""
+    r3 = a2a.pipeline(p, offset=3)
+    assert r3.delays == 0
+    assert r3.total_steps == 3 * p.total_rounds  # 3KM²/s exactly
+
+    if p.s > p.M // 2:
+        return  # paper: Schedule 1 requires s <= M/2 (2s local offsets/step)
+    r1 = a2a.pipeline(p, offset=1)
+    # paper: KM delays; our minimal-delay scheduler may consolidate a few
+    # (successive delays merge) so allow a small band around KM.
+    assert r1.delays <= a2a.schedule1_predicted_delays(p) * 2
+    assert r1.total_steps <= p.total_rounds + r1.delays + 3
+    # schedule-1 makespan ~ KM²/s + delays, far below schedule 3
+    assert r1.total_steps < r3.total_steps / 2
+
+
+def test_schedule1_sM2_constraint():
+    """Schedule 1 valid only if s <= M/2 (2s local offsets per step)."""
+    p = a2a.DAParams(2, 4, 2)  # s = M/2 boundary OK
+    r1 = a2a.pipeline(p, offset=1)
+    assert r1.total_steps > 0
+
+
+@given(st.sampled_from(CASES), st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_cost_scaling_property(p, x):
+    """n = x·KM² items -> x² · (KM²/s) rounds (Theorem 3 general form)."""
+    P = p.K * p.M * p.M
+    assert a2a.alltoall_cost_rounds(p, x * P) == x * x * p.total_rounds
+
+
+def test_beats_relatively_prime_example():
+    """Paper's K=7, M=16 example: running on embedded D3(5,15) with s=5
+    costs 225·(1.59)² ≈ 569 << 1792."""
+    emb = a2a.DAParams(5, 15, 5)
+    assert emb.total_rounds == 5 * 15 * 15 // 5  # 225
+    full_items = 7 * 16 * 16  # 1792 items on the big machine
+    ratio = full_items / (5 * 15 * 15)
+    cost = emb.total_rounds * ratio**2
+    assert cost < 1792
+    assert 550 < cost < 590

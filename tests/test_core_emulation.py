@@ -1,0 +1,56 @@
+"""Property 2 — D3(J,L) ⊂ D3(K,M) dilation-1 emulation + elastic failover."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import D3
+from repro.core.emulation import embed, largest_embeddable
+
+
+@given(
+    st.integers(2, 5), st.integers(2, 5), st.integers(1, 4), st.integers(2, 4)
+)
+@settings(max_examples=25, deadline=None)
+def test_embed_dilation1(K, M, J, L):
+    J, L = min(J, K), min(L, M)
+    emb = embed(D3(K, M), J, L)  # verify() runs inside
+    # image routers distinct
+    imgs = {emb.map_router(r) for r in emb.guest.routers()}
+    assert len(imgs) == emb.guest.num_routers
+
+
+def test_embed_noncontiguous_subsets():
+    emb = embed(D3(5, 6), 3, 4, c_set=(0, 2, 4), p_set=(1, 2, 4, 5))
+    emb.verify()
+
+
+def test_ports_map_to_legal_ports():
+    host = D3(5, 6)
+    emb = embed(host, 3, 4, c_set=(0, 2, 4), p_set=(1, 2, 4, 5))
+    for r in emb.guest.routers():
+        for delta in range(1, emb.guest.M):
+            port = emb.map_local_port(r, delta)
+            assert 1 <= port < host.M
+        for gamma in range(1, emb.guest.K):
+            port = emb.map_global_port(r, gamma)
+            assert 0 <= port < host.K
+
+
+def test_largest_embeddable_failover():
+    host = D3(4, 4)
+    dead = {(1, 2, 3)}
+    J, L, c_set, p_set = largest_embeddable(host, dead)
+    assert 1 not in c_set
+    assert J == 3
+    emb = embed(host, J, L, c_set=c_set, p_set=p_set)
+    for r in emb.guest.routers():
+        assert emb.map_router(r) not in dead
+
+
+def test_failover_multiple_failures():
+    host = D3(4, 4)
+    dead = {(0, 0, 0), (2, 3, 1)}
+    J, L, c_set, p_set = largest_embeddable(host, dead)
+    emb = embed(host, J, L, c_set=c_set, p_set=p_set)
+    for r in emb.guest.routers():
+        assert emb.map_router(r) not in dead

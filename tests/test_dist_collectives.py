@@ -1,0 +1,47 @@
+"""Dragonfly collectives ≡ XLA reference — executed in a subprocess with 16
+forced host devices (the main pytest process must keep 1 device; see the
+dry-run instructions in launch/dryrun.py)."""
+
+import os
+import subprocess
+import sys
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_dist_collectives_16dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "dist_check_script.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL DIST CHECKS PASSED" in proc.stdout
+
+
+def test_layout_factorizations():
+    from repro.dist.mesh import dragonfly_layout
+
+    l256 = dragonfly_layout(256)
+    assert (l256.topo.K, l256.topo.M) == (4, 8)
+    assert l256.da_params.s == 4
+    assert l256.sbh is not None and (l256.sbh.k, l256.sbh.m) == (2, 3)
+
+    l512 = dragonfly_layout(512)
+    assert (l512.topo.K, l512.topo.M) == (8, 8)
+    assert l512.da_params.s == 8
+
+    l16 = dragonfly_layout(16)
+    assert (l16.topo.K, l16.topo.M) == (4, 2)
+
+    l64 = dragonfly_layout(64)
+    assert (l64.topo.K, l64.topo.M) == (4, 4)

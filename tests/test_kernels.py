@@ -1,0 +1,101 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_matmul.block_matmul import block_matmul
+from repro.kernels.block_matmul.ref import block_matmul_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ops import gqa_attention
+
+
+# ---------------------------------------------------------------- matmul
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 128, 512), (128, 384, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_matmul_shapes(m, n, k, dtype):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype)
+    got = block_matmul(a, b, bm=128, bn=128, bk=128, interpret=True)
+    want = block_matmul_ref(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("tiles", [(64, 64, 64), (128, 64, 256)])
+def test_block_matmul_tile_sweep(tiles):
+    bm, bn, bk = tiles
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    got = block_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- attention
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("sq,sk", [(128, 128), (128, 256)])
+def test_flash_vs_ref(causal, sq, sk):
+    rng = np.random.default_rng(2)
+    BH, D = 4, 64
+    q = jnp.asarray(rng.standard_normal((BH, sq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BH, sk, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BH, sk, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, bq=64, bk=64, interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_sliding_window():
+    rng = np.random.default_rng(3)
+    BH, S, D, W = 2, 256, 64, 64
+    q = jnp.asarray(rng.standard_normal((BH, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BH, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BH, S, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=W, bq=64, bk=64, interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    rng = np.random.default_rng(4)
+    BH, S, D = 2, 128, 64
+    q = jnp.asarray(rng.standard_normal((BH, S, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((BH, S, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((BH, S, D)), dtype)
+    got = flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    want = attention_ref(q, k, v)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("hq,hkv", [(8, 8), (8, 2), (4, 1)])
+def test_gqa_grouping(hq, hkv):
+    rng = np.random.default_rng(5)
+    B, S, D = 2, 128, 32
+    q = jnp.asarray(rng.standard_normal((B, S, hq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, hkv, D)), jnp.float32)
+    got = gqa_attention(q, k, v, use_kernel=True, interpret=True)
+    want = gqa_attention(q, k, v, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_matches_big_kv_tiling():
+    """Property: result independent of kv tile size (online softmax)."""
+    rng = np.random.default_rng(6)
+    BH, S, D = 2, 256, 64
+    q = jnp.asarray(rng.standard_normal((BH, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BH, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BH, S, D)), jnp.float32)
+    a = flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    b = flash_attention(q, k, v, bq=64, bk=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)

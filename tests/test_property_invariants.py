@@ -1,0 +1,131 @@
+"""Hypothesis property tests on system-wide invariants: schedule algebra,
+routing bijectivity, collective payload conservation, checkpoint codecs."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import D3
+from repro.core.routing import vector_for, vector_dest
+from repro.core.alltoall import DAParams, rounds, round_vectors
+from repro.core.hypercube import SBH
+from repro.core.emulation import embed
+from repro.train import checkpoint as ckpt
+from repro.train import compression as C
+
+
+# --------------------------------------------------------- routing algebra
+@given(st.integers(2, 6), st.integers(2, 6), st.data())
+@settings(max_examples=40, deadline=None)
+def test_vector_composition_is_translation(K, M, data):
+    """The same vector from two sources produces destinations whose
+    coordinate differences mirror the sources' (after the d/p swap) —
+    i.e. vectors act equivariantly (underlies Property 1)."""
+    t = D3(K, M)
+    vec = (
+        data.draw(st.integers(0, K - 1)),
+        data.draw(st.integers(0, M - 1)),
+        data.draw(st.integers(0, M - 1)),
+    )
+    s1 = t.id_router(data.draw(st.integers(0, t.num_routers - 1)))
+    s2 = t.id_router(data.draw(st.integers(0, t.num_routers - 1)))
+    d1 = vector_dest(t, s1, vec)
+    d2 = vector_dest(t, s2, vec)
+    # difference of destinations == swapped difference of sources
+    assert (d1[0] - d2[0]) % K == (s1[0] - s2[0]) % K
+    assert (d1[1] - d2[1]) % M == (s1[2] - s2[2]) % M
+    assert (d1[2] - d2[2]) % M == (s1[1] - s2[1]) % M
+
+
+@given(st.sampled_from([(2, 4, 2), (4, 6, 2), (4, 8, 4), (6, 9, 3)]), st.data())
+@settings(max_examples=30, deadline=None)
+def test_da_round_disagreement(parms, data):
+    """Any round of the doubly-parallel schedule has pairwise-distinct
+    γ, π AND δ (the disagreeable-array property that Property 3 needs)."""
+    K, M, s = parms
+    p = DAParams(K, M, s)
+    mu = data.draw(st.integers(0, s - 1))
+    nu = data.draw(st.integers(0, s - 1))
+    a = data.draw(st.integers(0, p.m - 1))
+    b = data.draw(st.integers(0, p.m - 1))
+    c = data.draw(st.integers(0, p.k - 1))
+    vecs = round_vectors(p, mu, nu, a, b, c)
+    gs, ps, ds = zip(*vecs)
+    assert len(set(gs)) == s and len(set(ps)) == s and len(set(ds)) == s
+
+
+@given(st.sampled_from([(1, 1), (2, 1), (1, 2), (2, 2)]), st.data())
+@settings(max_examples=30, deadline=None)
+def test_sbh_emulation_is_involution(km, data):
+    """Flipping the same cube dimension twice returns to the start."""
+    s = SBH(*km)
+    x = data.draw(st.integers(0, s.num_nodes - 1))
+    dim = data.draw(st.integers(0, s.dims - 1))
+    once = s.emulation_path(s.node(x), dim)[-1]
+    back = s.emulation_path(once, dim)[-1]
+    assert back == s.node(x)
+
+
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(1, 4), st.integers(1, 4), st.data())
+@settings(max_examples=25, deadline=None)
+def test_embedding_preserves_vector_semantics(K, M, J, L, data):
+    """Routing a vector in the guest and mapping == mapping then routing
+    the translated ports in the host (dilation-1 emulation exactness)."""
+    J, L = min(J, K), min(L, M)
+    emb = embed(D3(K, M), J, L)
+    g = emb.guest
+    src = g.id_router(data.draw(st.integers(0, g.num_routers - 1)))
+    dst = g.id_router(data.draw(st.integers(0, g.num_routers - 1)))
+    vec = vector_for(g, src, dst)
+    assert vector_dest(g, src, vec) == dst
+    assert emb.map_router(dst) == emb.map_router(vector_dest(g, src, vec))
+
+
+# ------------------------------------------------------ codecs round-trip
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_quantize_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(300) * rng.uniform(0.01, 100), jnp.float32)
+    q, s = C.quantize(x)
+    back = C.dequantize(q, s, x.shape, x.size)
+    blockmax = np.abs(np.asarray(x)).max()
+    assert float(jnp.abs(back - x).max()) <= blockmax / 127 + 1e-6
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_flatten_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    tree = {
+        "a": {"b": rng.standard_normal(3), "c": (rng.standard_normal(2), rng.standard_normal(1))},
+        "d": rng.integers(0, 10, 4),
+    }
+    flat = ckpt._flatten(tree)
+    back = ckpt._unflatten(flat)
+    assert set(flat) == set(ckpt._flatten(back))
+    np.testing.assert_array_equal(back["a"]["c"][1], tree["a"]["c"][1])
+    np.testing.assert_array_equal(back["d"], tree["d"])
+
+
+# ----------------------------------------------- dry-run artifact sanity
+def test_dryrun_artifacts_consistent():
+    """If the sweep has run, every ok cell's roofline terms are finite and
+    positive, and no supported cell failed."""
+    import glob, json, pathlib
+
+    files = glob.glob(str(pathlib.Path(__file__).parents[1] / "experiments" / "dryrun" / "*.json"))
+    if not files:
+        import pytest
+        pytest.skip("dry-run sweep not executed in this checkout")
+    bad = []
+    for f in files:
+        d = json.load(open(f))
+        if d["status"] == "FAILED":
+            bad.append(f)
+        if d["status"] == "ok" and "roofline" in d:
+            r = d["roofline"]
+            assert r["compute_s"] >= 0 and np.isfinite(r["compute_s"]), f
+            assert r["step_time_bound_s"] > 0, f
+    assert not bad, bad

@@ -1,0 +1,62 @@
+"""Sharding rules + spec-tree/param-tree structural consistency for every
+architecture (catches spec/tree drift before the dry-run does)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.dist.sharding import ShardRules
+from repro.models import model as M
+
+
+RULES = ShardRules()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_spec_tree_matches_param_tree(arch):
+    cfg = get_config(arch)
+    specs = M.param_specs(cfg, RULES)
+    shapes = jax.eval_shape(lambda: M.init_params(jax.random.key(0), cfg))
+    # identical tree structure
+    jax.tree.map(lambda sp, sh: None, specs, shapes,
+                 is_leaf=lambda x: isinstance(x, P))
+    # every sharded dim actually divides by the axis cardinality
+    def check(spec, shaped):
+        dims = shaped.shape
+        axes = list(spec) + [None] * (len(dims) - len(spec))
+        for ax, dim in zip(axes, dims):
+            if ax is None:
+                continue
+            card = 16  # both mesh axes are 16-wide
+            assert dim % card == 0, (arch, shaped.shape, spec)
+    jax.tree.map(check, specs, shapes, is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "deepseek-v3-671b", "jamba-1.5-large-398b"])
+def test_expert_parallel_rule(arch):
+    cfg = get_config(arch)
+    E = cfg.moe.num_experts
+    ep = RULES.expert_parallel(E)
+    # deepseek 256 and jamba 16 divide the 16-wide axis; mixtral's 8 do not
+    assert ep == (E % 16 == 0)
+    spec = RULES.expert((E, cfg.d_model, cfg.moe.d_ff_expert), n_experts=E)
+    if ep:
+        assert spec[0] == "model"
+    else:
+        assert spec[0] is None and "model" in tuple(spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_structure(arch):
+    cfg = get_config(arch)
+    specs = M.cache_specs(cfg, RULES, long_context=False)
+    shapes = jax.eval_shape(lambda: M.init_cache(cfg, 16, 128))
+    jax.tree.map(lambda sp, sh: None, specs, shapes,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+def test_multi_pod_batch_axes():
+    r = ShardRules(pod_axis="pod")
+    assert r.batch_axes == ("pod", "data")
+    assert r.tokens() == P(("pod", "data"), None)
