@@ -1,11 +1,16 @@
 """Benchmark harness — one module per paper table/figure + timed micro-
-benchmarks of the runtime layers. Prints ``name,...`` CSV-ish lines.
+benchmarks of the runtime layers. Prints ``name,...`` CSV-ish lines;
+``--json BENCH_<date>.json`` additionally writes machine-readable records
+({name, params, us_per_call?, rounds?}) so the perf trajectory is tracked
+across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--json BENCH_2026-07-30.json]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -19,6 +24,24 @@ def _timed(fn, *args, warmup=1, iters=3, **kw):
         out = fn(*args, **kw)
     dt = (time.perf_counter() - t0) / iters
     return out, dt * 1e6
+
+
+def bench_schedule_lowering(log=print):
+    """IR -> mesh lowering throughput: emit the §3 Schedule and lower it to
+    device permutations (the control-plane cost the executor pays once per
+    layout, then caches)."""
+    from repro.core.alltoall import schedule
+    from repro.dist.mesh import dragonfly_layout
+    from repro.runtime.lowering import lower_alltoall
+
+    for n in (16, 64):
+        layout = dragonfly_layout(n)
+        p = layout.da_params
+        low, us = _timed(lambda: lower_alltoall(schedule(p, layout.topo)))
+        log(
+            f"schedule_lowering,n={n},K={p.K},M={p.M},s={p.s},"
+            f"rounds={p.total_rounds},permutes={low.num_permutes},us_per_call={us:.0f}"
+        )
 
 
 def bench_core_micro(log=print):
@@ -85,21 +108,67 @@ def bench_train_smoke(log=print):
     log(f"train_step_smoke,arch=tinyllama-smoke,B=4,S=32,us_per_call={us:.0f},loss={float(m['loss']):.3f}")
 
 
-def main() -> None:
+def _parse_record(line: str) -> dict | None:
+    """``name,k=v,...`` -> {name, params, us_per_call?, rounds?}."""
+    parts = line.strip().split(",")
+    if not parts or not parts[0] or "=" in parts[0]:
+        return None
+    rec: dict = {"name": parts[0], "params": {}}
+    for kv in parts[1:]:
+        if "=" not in kv:
+            continue
+        k, v = kv.split("=", 1)
+        try:
+            val: object = int(v)
+        except ValueError:
+            try:
+                val = float(v)
+            except ValueError:
+                val = v
+        if k in ("us_per_call", "rounds"):
+            rec[k] = val
+        else:
+            rec["params"][k] = val
+    return rec
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write machine-readable records to PATH")
+    args = ap.parse_args(argv)
+    if args.json:  # fail fast before minutes of benchmarking
+        with open(args.json, "a"):
+            pass
+
+    records: list[dict] = []
+
+    def log(line):
+        print(line)
+        rec = _parse_record(str(line))
+        if rec is not None:
+            records.append(rec)
+
     from benchmarks import bench_matmul, bench_alltoall, bench_hypercube, bench_broadcast
 
     print("# ---- paper §2: matrix product on D3(K²,M)")
-    bench_matmul.run()
+    bench_matmul.run(log)
     print("# ---- paper §3: doubly-parallel all-to-all")
-    bench_alltoall.run()
+    bench_alltoall.run(log)
     print("# ---- paper §4: SBH hypercube emulation")
-    bench_hypercube.run()
+    bench_hypercube.run(log)
     print("# ---- paper §5: broadcast spanning trees")
-    bench_broadcast.run()
+    bench_broadcast.run(log)
     print("# ---- runtime micro-benchmarks")
-    bench_core_micro()
-    bench_kernels()
-    bench_train_smoke()
+    bench_schedule_lowering(log)
+    bench_core_micro(log)
+    bench_kernels(log)
+    bench_train_smoke(log)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"# wrote {len(records)} records to {args.json}")
 
 
 if __name__ == "__main__":

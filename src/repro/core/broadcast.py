@@ -34,6 +34,7 @@ import dataclasses
 from repro.core.topology import D3, Router
 from repro.core.simulator import Simulator, Conflict
 from repro.core.routing import SyncHeader, STAR, expand_broadcast
+from repro.core.schedule import Schedule, hop_round
 
 
 Hop = tuple[int, Router, Router]  # (step, src, dst)
@@ -131,6 +132,58 @@ def check_m_broadcast(topo: D3, source: Router) -> list[Conflict]:
         for step, a, b in depth4_tree(topo, (c, d, p)):
             sim.add_hop(step + 1, a, b, packet=p)
     return sim.conflicts()
+
+
+# ---------------------------------------------------------------------------
+# Schedule IR emitters — the §5 trees as unified, lowerable schedules.
+# ---------------------------------------------------------------------------
+
+def depth3_schedule(topo: D3, root: Router) -> Schedule:
+    """One broadcast through the depth-3 tree as a single 3-step round.
+    Payload = ("bcast", root) — one packet duplicated down the tree."""
+    tag = ("bcast", topo.router_id(root))
+    rnd = hop_round(
+        [(step, a, b, tag) for step, a, b in depth3_tree(topo, root)],
+        meta={"root": root, "tree": "depth3"},
+    )
+    return Schedule("broadcast_depth3", topo, [rnd], meta={"root": root})
+
+
+def m_broadcast_schedule(topo: D3, source: Router) -> Schedule:
+    """Delegation + M edge-disjoint depth-4 trees as one 5-step round;
+    payload = tree color p, so the verifier sees M distinct packets."""
+    c, d, q = source
+    hops = []
+    for p in range(topo.M):
+        if (c, d, p) != source:
+            hops.append((0, source, (c, d, p), p))
+        for step, a, b in depth4_tree(topo, (c, d, p)):
+            hops.append((step + 1, a, b, p))
+    rnd = hop_round(hops, meta={"source": source, "tree": "m_depth4"})
+    return Schedule("broadcast_m_tree", topo, [rnd], meta={"source": source})
+
+
+def pipelined_m_broadcast_schedule(topo: D3, source: Router, waves: int) -> Schedule:
+    """X = waves·M broadcasts, waves pair-chained every 6 steps (2 waves of
+    M broadcasts per 6 hops => 3X/M makespan). One IR round per wave with
+    ``meta["start_step"]`` carrying the launch offset; replay with
+    ``verify(..., pipelined=True)``."""
+    c, d, q = source
+    rounds = []
+    for w in range(waves):
+        base = (w // 2) * 6 + (w % 2)  # pair members offset by 1
+        hops = []
+        for p in range(topo.M):
+            pid = w * topo.M + p
+            if (c, d, p) != source:
+                hops.append((0, source, (c, d, p), pid))
+            for step, a, b in depth4_tree(topo, (c, d, p)):
+                hops.append((step + 1, a, b, pid))
+        rounds.append(hop_round(hops, meta={"start_step": base, "wave": w}))
+    return Schedule(
+        "broadcast_m_tree_pipelined", topo, rounds,
+        meta={"source": source, "waves": waves, "X": waves * topo.M},
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -2,11 +2,35 @@
 
 All costs in units of t_w (router latency) unless noted. P = number of
 processors/routers. These formulas back benchmarks/ tables 1:1 with §2-§5.
+
+``price(schedule, t_w, t_s)`` prices a concrete ``core.schedule.Schedule``
+so analytic tables and replayed schedules are cross-checked from the SAME
+object: e.g. ``price(alltoall.schedule(p))`` must equal
+``alltoall_schedule3(K, M, s)`` with t_s = 0, and ``price(matmul.schedule(g),
+t_w, t_s)`` must equal ``matmul.network_time(g, g.n, t_w, t_s)``.
 """
 
 from __future__ import annotations
 
 import math
+
+
+def price(schedule, t_w: float = 1.0, t_s: float = 0.0) -> float:
+    """Barrier-replay cost of a Schedule: each round pays its step count in
+    t_w plus ``meta["startups"]`` (default 1) software startups in t_s."""
+    total = 0.0
+    for r in schedule.rounds:
+        total += r.num_steps * t_w + r.meta.get("startups", 1) * t_s
+    return total
+
+
+def price_pipelined(schedule, t_w: float = 1.0, t_s: float = 1.0) -> float:
+    """Pipelined makespan: rounds launch at meta["start_step"] and overlap;
+    one startup for the whole pipeline."""
+    end = 0
+    for r in schedule.rounds:
+        end = max(end, r.meta.get("start_step", 0) + r.num_steps)
+    return end * t_w + t_s
 
 
 # ------------------------------- §2 table: n×n matmul network costs -------

@@ -31,6 +31,7 @@ import numpy as np
 from repro.core.topology import D3, Router
 from repro.core.simulator import Simulator, Conflict
 from repro.core.routing import SyncHeader, header_trace
+from repro.core.schedule import Schedule, path_round
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +167,31 @@ def allreduce_rounds(sbh: SBH) -> list[list[tuple[Router, Router]]]:
             pairs.append((r, sbh.emulation_path(r, dim)[-1]))
         out.append(pairs)
     return out
+
+
+def allreduce_schedule(sbh: SBH) -> Schedule:
+    """Ascend–descend all-reduce as a unified ``Schedule``: one round per
+    cube dimension, hops expanded from the dilation-≤3 emulation paths
+    (payload = node index), ``meta["pairs"]`` holding the endpoint exchange
+    permutation (an involution) the runtime lowers to one ppermute+add.
+    Barrier makespan = Σ max-dilation = 2(k+2m) — the factor-2 claim."""
+    topo = sbh.topo
+    rounds = []
+    for dim in range(sbh.dims):
+        paths = []
+        pairs = []
+        for x in range(sbh.num_nodes):
+            path = sbh.emulation_path(sbh.node(x), dim)
+            paths.append((path, x))
+            pairs.append((x, sbh.index(path[-1])))
+        rounds.append(
+            path_round(paths, meta={"dim": dim, "pairs": tuple(pairs),
+                                    "field": sbh.field_of(dim)})
+        )
+    return Schedule(
+        "sbh_allreduce", topo, rounds,
+        meta={"k": sbh.k, "m": sbh.m, "dims": sbh.dims},
+    )
 
 
 def check_allreduce_conflicts(sbh: SBH) -> tuple[list[Conflict], int]:

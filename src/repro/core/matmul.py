@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core.topology import D3, Router
 from repro.core.simulator import Simulator, Conflict
+from repro.core.schedule import Schedule, Round, hop_round
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +122,27 @@ def vector_matmul_phases(
     for a, b in ph1 + ph3:
         assert topo.is_local_link(a, b), (a, b)
     return [ph0, ph1, ph2, ph3]
+
+
+def round_ir(g: MatmulGrid, s: int, u: int, S: int | None = None) -> Round:
+    """One vector-matmul round as an IR ``Round``: the 4 phases become steps
+    0..3, payload = hop index within its phase (each phase's hops are
+    pairwise link-distinct packets). ``startups=2`` records the two
+    off-and-ons the paper charges per round (4 t_w + 2 t_s)."""
+    hops = []
+    for phase, phase_hops in enumerate(vector_matmul_phases(g, s, u, S)):
+        for pkt, (a, b) in enumerate(phase_hops):
+            hops.append((phase, a, b, pkt))
+    return hop_round(hops, meta={"row": (s, u), "S": S if S is not None else s,
+                                 "startups": 2})
+
+
+def schedule(g: MatmulGrid) -> Schedule:
+    """Theorem 1: a KM×KM matrix product is KM rounds (one per row (s,u) of
+    the left matrix), each 4 network hops — √n rounds on n = (KM)² routers
+    is the paper's headline count for the square grid."""
+    rounds = [round_ir(g, s, u) for s in range(g.K) for u in range(g.M)]
+    return Schedule("matmul_d3", g.topo, rounds, meta={"grid": g, "n": g.n})
 
 
 def check_round_conflicts(g: MatmulGrid, s: int, u: int) -> list[Conflict]:

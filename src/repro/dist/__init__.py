@@ -1,0 +1,7 @@
+"""Distributed substrate: device layouts, sharding rules, collectives.
+
+``mesh`` maps a flat device count onto the Swapped Dragonfly D3(K, M);
+``sharding`` holds the PartitionSpec rule-set and the process-wide active
+(rules, mesh) registration; ``collectives`` are the §2–§5 algorithms run as
+real device collectives, lowered from the core Schedule IR by ``runtime``.
+"""

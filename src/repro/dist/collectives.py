@@ -1,0 +1,89 @@
+"""The paper's four algorithms as real device collectives.
+
+Each ``dragonfly_*`` entry point is the §2–§5 schedule, emitted by the core
+algorithm module as a ``Schedule``, lowered once per layout by
+``runtime.lowering`` (cached — lowering is pure Python), and replayed by
+``runtime.executor`` as ppermutes inside the caller's shard_map. The HLO of
+``dragonfly_all_to_all`` therefore shows the round structure literally:
+one collective-permute per source vector, K·M² in total.
+
+All functions run INSIDE shard_map over a 1-D axis of ``layout.n`` devices,
+device i = router ``layout.topo.id_router(i)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alltoall as a2a
+from repro.core import broadcast as bc
+from repro.core import hypercube as hc
+from repro.dist.mesh import DeviceLayout
+from repro.runtime import executor, lowering
+
+
+# ----------------------------------------------------------- cached lowering
+@functools.lru_cache(maxsize=None)
+def _lowered_alltoall(layout: DeviceLayout) -> lowering.LoweredAllToAll:
+    return lowering.lower_alltoall(a2a.schedule(layout.da_params, layout.topo))
+
+
+@functools.lru_cache(maxsize=None)
+def _lowered_allreduce(layout: DeviceLayout) -> lowering.LoweredExchange:
+    sbh = layout.sbh
+    if sbh is None:
+        raise ValueError(
+            f"D3({layout.topo.K},{layout.topo.M}) is not a power-of-two SBH; "
+            "no hypercube all-reduce schedule exists"
+        )
+    return lowering.lower_exchange(hc.allreduce_schedule(sbh))
+
+
+@functools.lru_cache(maxsize=None)
+def _lowered_broadcast(layout: DeviceLayout, root: int) -> lowering.LoweredBroadcast:
+    return lowering.lower_broadcast(
+        bc.depth3_schedule(layout.topo, layout.topo.id_router(root))
+    )
+
+
+# ------------------------------------------------------------- collectives
+def xla_all_to_all(x, axis_name: str):
+    """Reference: the fused XLA op, same (n, ...) chunk layout."""
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0)
+
+
+def dragonfly_all_to_all(x, axis_name: str, layout: DeviceLayout):
+    """§3 doubly-parallel all-to-all: K·M²/s rounds of s ppermutes.
+
+    ``x``: (n, ...) with x[j] = chunk for device j; returns (n, ...) with
+    out[j] = chunk from device j (the lax.all_to_all 0/0 layout)."""
+    return executor.alltoall_on_axis(x, axis_name, _lowered_alltoall(layout))
+
+
+def dragonfly_all_reduce(x, axis_name: str, layout: DeviceLayout):
+    """§4 ascend all-reduce (sum) over the emulated hypercube."""
+    return executor.allreduce_on_axis(x, axis_name, _lowered_allreduce(layout))
+
+
+def dragonfly_broadcast(x, axis_name: str, layout: DeviceLayout, root: int = 0):
+    """§5 depth-3 spanning-tree broadcast from device ``root``."""
+    return executor.broadcast_on_axis(x, axis_name, _lowered_broadcast(layout, root))
+
+
+def dragonfly_matmul(b_block, a_block, row_axis: str, col_axis: str):
+    """§2 block matrix product on the K×K array of M×M blocks, viewed as an
+    (N, N) device grid with N = KM.
+
+    Device (i, j) holds blocks B[i, j] and A[i, j] and must produce
+    C[i, j] = Σ_k B[i, k] A[k, j]. The paper's round broadcasts row
+    vectors of B across the grid (phases 2.1/2.2) and converges partial
+    products (2.3); on the mesh that data movement is the row/column
+    exchange below — gather B's row i over the column axis and A's column
+    j over the row axis, then contract the X×X blocks locally (the
+    off-network compute of Theorem 2)."""
+    b_row = jax.lax.all_gather(b_block, col_axis)  # (N, X, X): B[i, k] ∀k
+    a_col = jax.lax.all_gather(a_block, row_axis)  # (N, X, X): A[k, j] ∀k
+    return jnp.einsum("kab,kbc->ac", b_row, a_col)

@@ -1,0 +1,144 @@
+"""Sharding rule-set + process-wide active (rules, mesh) registration.
+
+``ShardRules`` is the single source of PartitionSpecs for every
+architecture: tensor-parallel projections (Megatron column/row split over
+the ``model`` axis), token/batch sharding over the data axes, and the MoE
+expert placement (expert-parallel when E divides the model axis, TP-experts
+otherwise). Launchers call ``set_active(rules, mesh)`` so model-internal
+code (MoE dispatch, sequence parallelism) can fetch the live rules without
+threading them through every call signature; outside a launcher everything
+degrades to single-device no-ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRules:
+    """Axis names + derived PartitionSpec builders.
+
+    Spec builders take the parameter's shape tuple (dims may be dummy 0s —
+    specs are shape-independent; the structural test asserts every sharded
+    dim actually divides the axis cardinality)."""
+
+    tensor_axis: str = "model"
+    data_axis: str = "data"
+    pod_axis: str | None = None
+    fsdp: bool = False
+    zero1: bool = False
+    seq_parallel: bool = False
+    moe_collectives: str = "xla"  # "xla" | "dragonfly"
+    model_axis_size: int = 16
+    data_axis_size: int = 16
+
+    # ------------------------------------------------------------- axes
+    @property
+    def batch_axes(self):
+        if self.pod_axis:
+            return (self.pod_axis, self.data_axis)
+        return self.data_axis
+
+    # ------------------------------------------------------ activations
+    def tokens(self) -> P:
+        """(B·S,) or (B, S) token ids: sharded over the batch axes."""
+        return P(self.batch_axes, None)
+
+    def activations(self) -> P:
+        """(B, S, d) activations: batch over data axes, d replicated."""
+        return P(self.batch_axes, None, None)
+
+    # ----------------------------------------------------- dense params
+    def attn_in(self, shape) -> P:
+        """Column-parallel input projection (d, heads·hd): shard dim 1."""
+        return P(None, self.tensor_axis)
+
+    def attn_out(self, shape) -> P:
+        """Row-parallel output projection (heads·hd, d): shard dim 0."""
+        return P(self.tensor_axis, None)
+
+    def mlp_in(self, shape) -> P:
+        return P(None, self.tensor_axis)
+
+    def mlp_out(self, shape) -> P:
+        return P(self.tensor_axis, None)
+
+    def embed(self, shape) -> P:
+        """(vocab, d) table: shard the model dim (gather-free lookup)."""
+        return P(None, self.tensor_axis)
+
+    # ------------------------------------------------------------- MoE
+    def expert_parallel(self, n_experts: int) -> bool:
+        return n_experts % self.model_axis_size == 0
+
+    def expert(self, shape, ff_dim: int | None = None, n_experts: int | None = None) -> P:
+        """Per-expert stacked weights (E, ..., ...).
+
+        Expert-parallel (E divides the model axis): shard the expert dim —
+        each model shard owns E/n_model experts outright and dispatch is
+        the §3 all-to-all. TP fallback: experts replicated, their ff dim
+        sharded over the tensor axis."""
+        ndim = len(shape)
+        if n_experts is not None and self.expert_parallel(n_experts):
+            return P(self.tensor_axis, *([None] * (ndim - 1)))
+        axes: list = [None] * ndim
+        axes[ff_dim if ff_dim is not None else ndim - 1] = self.tensor_axis
+        return P(*axes)
+
+    # ------------------------------------------------------------ FSDP
+    def _maybe_fsdp(self, spec: P, shape, zero: bool = False) -> P:
+        """Additionally shard the first spec-free dim divisible by the data
+        axis over the batch axes (ZeRO-1/3 partitioning)."""
+        if not (self.fsdp or zero):
+            return spec
+        axes = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (ax, dim) in enumerate(zip(axes, shape)):
+            if ax is None and dim and dim % self.data_axis_size == 0:
+                axes[i] = self.batch_axes
+                return P(*axes)
+        return spec
+
+
+# --------------------------------------------------------------------------
+# Active-rules registry (set by launchers, read by model internals).
+# --------------------------------------------------------------------------
+
+_ACTIVE: tuple[ShardRules, object] | None = None
+
+
+def set_active(rules: ShardRules, mesh) -> None:
+    """Register the live (rules, mesh); axis sizes are re-derived from the
+    mesh so rule defaults never lie about the actual hardware."""
+    global _ACTIVE
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    repl = {}
+    if rules.tensor_axis in sizes:
+        repl["model_axis_size"] = sizes[rules.tensor_axis]
+    if rules.data_axis in sizes:
+        repl["data_axis_size"] = sizes[rules.data_axis]
+    if repl:
+        rules = dataclasses.replace(rules, **repl)
+    _ACTIVE = (rules, mesh)
+
+
+def clear_active() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active() -> tuple[ShardRules, object] | None:
+    return _ACTIVE
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint(P(*axes ... padded)) against the active
+    mesh; a no-op outside a launcher (single-device tests)."""
+    if _ACTIVE is None:
+        return x
+    _, mesh = _ACTIVE
+    padded = tuple(axes) + (None,) * (x.ndim - len(axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*padded)))

@@ -3,6 +3,12 @@
     single pod : (16, 16)      axes ("data", "model")       256 chips
     multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") 512 chips
 
+The model axis doubles as the Swapped Dragonfly: ``dragonfly_for_mesh``
+views it as D3(K, M) (16 -> D3(4,2), so a pod's model axis runs the §3
+all-to-all in K·M²/s ppermute rounds), and ``make_dragonfly_mesh`` builds a
+flat 1-D mesh whose device order IS the router order — the executable form
+of the core Schedule IR via runtime/executor.py.
+
 Functions, not module constants — importing this module never touches jax
 device state (the dry-run sets XLA_FLAGS before any jax import)."""
 
@@ -10,15 +16,15 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist.mesh import DeviceLayout, dragonfly_layout
 from repro.dist.sharding import ShardRules
+from repro.runtime import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_rules(*, multi_pod: bool = False, fsdp: bool = False) -> ShardRules:
@@ -32,3 +38,24 @@ def make_rules(*, multi_pod: bool = False, fsdp: bool = False) -> ShardRules:
 
 def axis_sizes(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dragonfly_for_mesh(mesh, axis: str = "model") -> DeviceLayout:
+    """The D3 view of one mesh axis — what the dragonfly collectives
+    (dist/collectives.py) replay their lowered schedules over."""
+    return dragonfly_layout(axis_sizes(mesh)[axis])
+
+
+def make_dragonfly_mesh(n: int | None = None, axis_name: str = "df"):
+    """A flat 1-D mesh over n devices in router order, plus its layout.
+
+    Device i of the axis is router ``layout.topo.id_router(i)``; schedules
+    lowered from the IR (runtime/lowering.py) execute on it verbatim."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = n if n is not None else len(devs)
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return Mesh(np.array(devs[:n]), (axis_name,)), dragonfly_layout(n)

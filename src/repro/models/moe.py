@@ -151,10 +151,13 @@ def moe_apply_ep(params, x, cfg):
     token buffers travel (E, C_loc, d) -> (E_loc, n_model·C_loc, d).
 
     The ``--collectives dragonfly`` variant swaps lax.all_to_all for the
-    doubly-parallel ppermute schedule (dist/collectives.py) — same
-    payload, K·M²/s visible rounds (see EXPERIMENTS.md §Perf).
+    doubly-parallel ppermute schedule: the §3 Schedule IR emitted by
+    core/alltoall.py, lowered by runtime/lowering.py, replayed by
+    runtime/executor.py (via dist/collectives.py) — same payload,
+    K·M²/s visible rounds (see EXPERIMENTS.md §Perf).
     """
     from repro.dist import sharding as SH
+    from repro.runtime import compat
     from jax.sharding import PartitionSpec as PS
 
     rules, mesh = SH.active()
@@ -220,7 +223,7 @@ def moe_apply_ep(params, x, cfg):
         return out.astype(xt.dtype), aux
 
     xt = x.reshape(B * S, d)
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(
@@ -247,6 +250,7 @@ def moe_apply_tp(params, x, cfg):
     all-gather (the pjit sparse path's scatter pulled the full global
     token set to every chip; see EXPERIMENTS.md §Perf cell A, iter 1)."""
     from repro.dist import sharding as SH
+    from repro.runtime import compat
     from jax.sharding import PartitionSpec as PS
 
     rules, mesh = SH.active()
@@ -287,7 +291,7 @@ def moe_apply_tp(params, x, cfg):
         return out.astype(xt.dtype), aux
 
     xt = x.reshape(B * S, d)
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(

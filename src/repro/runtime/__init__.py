@@ -1,0 +1,9 @@
+"""Runtime: lowering of core Schedule IR onto real JAX device meshes.
+
+``lowering`` turns a ``core.schedule.Schedule`` into per-round device
+permutations / tree matchings; ``executor`` replays them as ``ppermute``
+collectives inside ``shard_map``. ``compat`` papers over jax API drift
+(shard_map moved out of jax.experimental after 0.4.x).
+"""
+
+from repro.runtime import compat, executor, lowering  # noqa: F401

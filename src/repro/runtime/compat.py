@@ -1,0 +1,33 @@
+"""jax API drift shims.
+
+The repo targets both the 0.4.x line (shard_map in jax.experimental, with
+``check_rep``) and newer jax (``jax.shard_map`` with ``check_vma``). All
+runtime / dist / model code routes shard_map through here.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """jax.shard_map when available, else the jax.experimental fallback.
+    ``check_vma`` maps onto the older ``check_rep`` flag."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """jax.make_mesh (>= 0.4.35) without the newer axis_types kwarg;
+    falls back to mesh_utils + Mesh on older releases."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    from jax.experimental import mesh_utils
+
+    devices = mesh_utils.create_device_mesh(tuple(axis_shapes))
+    return jax.sharding.Mesh(devices, tuple(axis_names))

@@ -1,0 +1,162 @@
+"""Mechanical lowering: Schedule IR -> device-mesh collective programs.
+
+A ``Schedule``'s rounds become sequences of primitive mesh operations:
+
+  * a *vector round* (``meta["vectors"]``) lowers to one full device
+    permutation per vector — Property 1 makes every source vector a
+    bijection of the router set, so each vector is exactly one ``ppermute``;
+  * an *exchange round* (``meta["pairs"]``) lowers to one permutation, the
+    endpoint map of its emulation paths (hypercube dimension rounds);
+  * a *tree round* (spanning-tree hops) lowers per step into *matchings* —
+    maximal hop subsets where every device sends at most once and receives
+    at most once — each a masked partial ``ppermute``.
+
+Device index = ``topo.router_id`` (the linear c·M²+d·M+p order), so a 1-D
+mesh axis of K·M² devices is the D3 network and the conflict-freedom the
+simulator proved for the IR is exactly the claim that each lowered round's
+permutations can fly concurrently on the physical links.
+
+Lowering is pure Python on hashable IR — no jax imports — so it can be
+cached per (topology, schedule) and reused across traces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.schedule import Round, Schedule, permutation_of_vector
+from repro.core.topology import D3
+
+
+@dataclasses.dataclass(frozen=True)
+class PermOp:
+    """One full permutation over device ids: device i sends to sigma[i]."""
+
+    pairs: tuple[tuple[int, int], ...]
+
+    @property
+    def sigma(self) -> tuple[int, ...]:
+        out = [0] * len(self.pairs)
+        for s, d in self.pairs:
+            out[s] = d
+        return tuple(out)
+
+    @property
+    def inverse(self) -> tuple[int, ...]:
+        out = [0] * len(self.pairs)
+        for s, d in self.pairs:
+            out[d] = s
+        return tuple(out)
+
+    def __post_init__(self) -> None:
+        srcs = {s for s, _ in self.pairs}
+        dsts = {d for _, d in self.pairs}
+        if len(srcs) != len(self.pairs) or dsts != srcs:
+            raise ValueError("PermOp pairs must form a permutation")
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchOp:
+    """One matching (partial permutation): receivers are masked in."""
+
+    pairs: tuple[tuple[int, int], ...]
+
+    @property
+    def dsts(self) -> tuple[int, ...]:
+        return tuple(d for _, d in self.pairs)
+
+    def __post_init__(self) -> None:
+        if len({s for s, _ in self.pairs}) != len(self.pairs):
+            raise ValueError("MatchOp sources must be distinct")
+        if len({d for _, d in self.pairs}) != len(self.pairs):
+            raise ValueError("MatchOp destinations must be distinct")
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredAllToAll:
+    n: int
+    rounds: tuple[tuple[PermOp, ...], ...]
+
+    @property
+    def num_permutes(self) -> int:
+        return sum(len(r) for r in self.rounds)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredExchange:
+    n: int
+    rounds: tuple[PermOp, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredBroadcast:
+    n: int
+    root: int
+    stages: tuple[MatchOp, ...]
+
+
+# --------------------------------------------------------------------------
+
+def lower_alltoall(schedule: Schedule) -> LoweredAllToAll:
+    """Each round's s vectors -> s device permutations (one ppermute each).
+    K·M²/s rounds × s vectors = K·M² permutes for the full exchange."""
+    topo = schedule.topo
+    rounds = []
+    for rnd in schedule.rounds:
+        vecs = rnd.meta.get("vectors")
+        if vecs is None:
+            raise ValueError(f"round lacks meta['vectors']; not a vector round: {rnd.meta}")
+        rounds.append(
+            tuple(PermOp(tuple(permutation_of_vector(topo, v))) for v in vecs)
+        )
+    return LoweredAllToAll(topo.num_routers, tuple(rounds))
+
+
+def lower_exchange(schedule: Schedule) -> LoweredExchange:
+    """One permutation per round from meta['pairs'] (hypercube dimension
+    exchanges: involutions over the node set)."""
+    n = schedule.topo.num_routers
+    rounds = []
+    for rnd in schedule.rounds:
+        pairs = rnd.meta.get("pairs")
+        if pairs is None:
+            raise ValueError(f"round lacks meta['pairs']: {rnd.meta}")
+        rounds.append(PermOp(tuple(pairs)))
+    return LoweredExchange(n, tuple(rounds))
+
+
+def hops_to_matchings(topo: D3, rnd: Round) -> list[MatchOp]:
+    """Decompose a tree round's hops, step by step, into matchings. Within
+    a step a source may fan out to several children (packet duplication);
+    each fan-out degree becomes one matching. Step order is preserved so
+    data dependencies (parent before child) hold."""
+    stages: list[MatchOp] = []
+    for step in range(rnd.num_steps):
+        remaining = [(topo.router_id(h.src), topo.router_id(h.dst)) for h in rnd.hops_at(step)]
+        while remaining:
+            used_src: set[int] = set()
+            used_dst: set[int] = set()
+            matching: list[tuple[int, int]] = []
+            rest: list[tuple[int, int]] = []
+            for s, d in remaining:
+                if s not in used_src and d not in used_dst:
+                    used_src.add(s)
+                    used_dst.add(d)
+                    matching.append((s, d))
+                else:
+                    rest.append((s, d))
+            stages.append(MatchOp(tuple(matching)))
+            remaining = rest
+    return stages
+
+
+def lower_broadcast(schedule: Schedule) -> LoweredBroadcast:
+    """A (single-round) spanning-tree schedule -> ordered masked matchings."""
+    topo = schedule.topo
+    if schedule.num_rounds != 1:
+        raise ValueError("lower_broadcast expects a single-round tree schedule")
+    root = schedule.meta.get("root") or schedule.meta.get("source")
+    if root is None:
+        raise ValueError("broadcast schedule lacks meta['root']/['source']")
+    stages = hops_to_matchings(topo, schedule.rounds[0])
+    return LoweredBroadcast(topo.num_routers, topo.router_id(root), tuple(stages))

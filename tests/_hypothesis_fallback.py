@@ -1,0 +1,90 @@
+"""Deterministic stand-in for the tiny hypothesis subset these tests use.
+
+When ``hypothesis`` is installed the real library is used (see the
+try/except at each import site); otherwise ``@given`` degrades to a seeded
+loop over ``max_examples`` random samples — the property tests still
+exercise a spread of inputs, just without shrinking or example databases.
+"""
+
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng: random.Random):
+        return self._sampler(rng)
+
+    def filter(self, pred) -> "_Strategy":
+        def sampler(rng, _tries=1000):
+            for _ in range(_tries):
+                v = self._sampler(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+
+        return _Strategy(sampler)
+
+    def map(self, fn) -> "_Strategy":
+        return _Strategy(lambda rng: fn(self._sampler(rng)))
+
+
+class _DataObject:
+    """Mimics hypothesis' interactive data object: draw(strategy)."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str | None = None):
+        return strategy.sample(self._rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        pool = list(elements)
+        return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+    @staticmethod
+    def tuples(*strats: "_Strategy") -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+    @staticmethod
+    def data() -> _Strategy:
+        return _Strategy(lambda rng: _DataObject(rng))
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(f):
+        f._fallback_max_examples = max_examples
+        return f
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(f):
+        # NOTE: no functools.wraps — copying __wrapped__/signature would
+        # make pytest treat the sampled parameters as fixtures.
+        def wrapper():
+            n = getattr(
+                wrapper, "_fallback_max_examples",
+                getattr(f, "_fallback_max_examples", 20),
+            )
+            rng = random.Random(0xD3)  # deterministic across runs
+            for _ in range(n):
+                f(*(s.sample(rng) for s in strats))
+
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        wrapper.__module__ = f.__module__
+        return wrapper
+
+    return deco

@@ -14,6 +14,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.dist.mesh import dragonfly_layout
 from repro.dist import collectives as coll
+from repro.runtime.compat import shard_map
 
 
 def get_mesh(n):
@@ -31,7 +32,7 @@ def check_all_to_all():
 
     @jax.jit
     def run_df(x):
-        f = jax.shard_map(
+        f = shard_map(
             lambda s: coll.dragonfly_all_to_all(s[0], "x", layout)[None],
             mesh=mesh, in_specs=P("x"), out_specs=P("x"),
         )
@@ -39,7 +40,7 @@ def check_all_to_all():
 
     @jax.jit
     def run_ref(x):
-        f = jax.shard_map(
+        f = shard_map(
             lambda s: coll.xla_all_to_all(s[0], "x")[None],
             mesh=mesh, in_specs=P("x"), out_specs=P("x"),
         )
@@ -63,7 +64,7 @@ def check_all_reduce():
 
     @jax.jit
     def run_df(x):
-        f = jax.shard_map(
+        f = shard_map(
             lambda s: coll.dragonfly_all_reduce(s[0], "x", layout)[None],
             mesh=mesh, in_specs=P("x"), out_specs=P("x"),
         )
@@ -85,7 +86,7 @@ def check_broadcast():
 
     @jax.jit
     def run_df(x):
-        f = jax.shard_map(
+        f = shard_map(
             lambda s: coll.dragonfly_broadcast(s[0], "x", layout, root=root)[None],
             mesh=mesh, in_specs=P("x"), out_specs=P("x"),
         )
@@ -109,7 +110,7 @@ def check_matmul():
 
     @jax.jit
     def run(Bm, Am):
-        f = jax.shard_map(
+        f = shard_map(
             lambda bb, aa: coll.dragonfly_matmul(bb, aa, "row", "col"),
             mesh=mesh,
             in_specs=(P("row", "col"), P("row", "col")),
@@ -130,7 +131,7 @@ def check_ppermute_round_count():
     mesh = get_mesh(n)
     x = jnp.zeros((n, n, 4), jnp.float32)
     f = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda s: coll.dragonfly_all_to_all(s[0], "x", layout)[None],
             mesh=mesh, in_specs=P("x"), out_specs=P("x"),
         )

@@ -1,7 +1,10 @@
 """Property 2 — D3(J,L) ⊂ D3(K,M) dilation-1 emulation + elastic failover."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is optional — deterministic fallback sampler otherwise
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.topology import D3
 from repro.core.emulation import embed, largest_embeddable

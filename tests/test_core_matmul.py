@@ -9,7 +9,10 @@ preserved and machine-verified here.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is optional — deterministic fallback sampler otherwise
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.matmul import (
     MatmulGrid,

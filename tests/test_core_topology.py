@@ -3,7 +3,10 @@
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is optional — deterministic fallback sampler otherwise
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.topology import D3
 from repro.core.routing import vector_for, vector_dest, vector_path, path_links

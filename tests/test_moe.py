@@ -5,7 +5,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is optional — deterministic fallback sampler otherwise
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs import get_smoke_config
 from repro.models import moe as MOE

@@ -1,0 +1,181 @@
+"""Unified Schedule IR: golden equivalence with the pre-IR emitters, the
+single verify() entry point, round-count formulas, and price() cross-checks
+against the analytic cost tables."""
+
+import math
+
+import pytest
+
+from repro.core.topology import D3
+from repro.core.routing import vector_dest
+from repro.core import alltoall as a2a
+from repro.core import broadcast as bc
+from repro.core import costmodel as cm
+from repro.core import hypercube as hc
+from repro.core import matmul as mm
+from repro.core.schedule import Schedule, Hop, vector_round
+from repro.core.simulator import verify
+
+
+# The acceptance grid: all four algorithms conflict-free on these fabrics.
+TOPOS = [(4, 4), (4, 8), (9, 3)]
+
+
+def _da_params(K, M):
+    return a2a.DAParams(K, M, math.gcd(K, M))
+
+
+# ---------------------------------------------------------------- golden
+@pytest.mark.parametrize("KM", [(4, 4), (4, 8)], ids=str)
+def test_golden_alltoall_rounds_match_legacy(KM):
+    """Each emitted IR round carries exactly the legacy rounds() vectors,
+    and its hops are the l-g-l expansion check_vector_round replayed."""
+    p = _da_params(*KM)
+    topo = D3(p.K, p.M)
+    routers = list(topo.routers())
+    legacy = list(a2a.rounds(p))
+    irs = a2a.iter_round_irs(p, topo)
+    for (key, vecs), rnd in zip(legacy, irs):
+        assert rnd.meta["key"] == key
+        assert rnd.meta["vectors"] == tuple(vecs)
+        expected = []
+        for v in vecs:
+            gamma, pi, delta = v
+            for r in routers:
+                tag = (v, topo.router_id(r))
+                r1 = topo.local_hop(r, delta)
+                r2 = topo.global_hop(r1, gamma)
+                r3 = topo.local_hop(r2, pi)
+                if r1 != r:
+                    expected.append(Hop(0, r, r1, tag))
+                if r2 != r1:
+                    expected.append(Hop(1, r1, r2, tag))
+                if r3 != r2:
+                    expected.append(Hop(2, r2, r3, tag))
+        assert rnd.hops == tuple(expected)
+
+
+@pytest.mark.parametrize("KM", [(4, 4), (4, 8)], ids=str)
+def test_golden_broadcast_trees_match_legacy(KM):
+    topo = D3(*KM)
+    root = (1, 0, 1)
+    sch = bc.depth3_schedule(topo, root)
+    assert [(h.step, h.src, h.dst) for h in sch.rounds[0].hops] == bc.depth3_tree(topo, root)
+    src = (0, 1, 0)
+    schm = bc.m_broadcast_schedule(topo, src)
+    assert [(h.step, h.src, h.dst) for h in schm.rounds[0].hops] == bc.m_broadcast(topo, src)
+    # payloads are the tree colors 0..M-1
+    assert schm.rounds[0].payloads() == set(range(topo.M))
+
+
+@pytest.mark.parametrize("KM", [(4, 4), (4, 8)], ids=str)
+def test_golden_matmul_round_matches_phases(KM):
+    K, M = KM
+    g = mm.MatmulGrid(K // 2, M)  # D3((K/2)², M)... grid K'=K/2 -> topo D3(K'²,M)
+    rnd = mm.round_ir(g, 0, 1)
+    phases = mm.vector_matmul_phases(g, 0, 1)
+    expected = [
+        (phase, a, b) for phase, hops in enumerate(phases) for (a, b) in hops
+    ]
+    assert [(h.step, h.src, h.dst) for h in rnd.hops] == expected
+    assert rnd.meta["startups"] == 2
+
+
+@pytest.mark.parametrize("km", [(2, 2), (2, 3)], ids=str)
+def test_golden_hypercube_rounds_match_emulation_paths(km):
+    sbh = hc.SBH(*km)
+    sch = hc.allreduce_schedule(sbh)
+    assert sch.num_rounds == sbh.dims
+    for dim, rnd in enumerate(sch.rounds):
+        expected = []
+        pairs = []
+        for x in range(sbh.num_nodes):
+            path = sbh.emulation_path(sbh.node(x), dim)
+            pairs.append((x, sbh.index(path[-1])))
+            for i in range(len(path) - 1):
+                if path[i] != path[i + 1]:
+                    expected.append(Hop(i, path[i], path[i + 1], x))
+        assert rnd.hops == tuple(expected)
+        assert rnd.meta["pairs"] == tuple(pairs)
+
+
+# ------------------------------------------------------- verify() property
+@pytest.mark.parametrize("KM", TOPOS, ids=str)
+def test_verify_alltoall_zero_conflicts_and_round_count(KM):
+    """Theorem 3 on the IR: n/s rounds (n = K·M² unit items), zero
+    conflicts, every vector's chunk delivered."""
+    p = _da_params(*KM)
+    topo = D3(p.K, p.M)
+    n_rounds = 0
+    for rnd in a2a.iter_round_irs(p, topo):
+        rep = verify(topo, Schedule("a2a_round", topo, [rnd]))
+        assert rep.ok, rep.conflicts[:2]
+        n_rounds += 1
+    assert n_rounds == p.total_rounds == p.K * p.M * p.M // p.s
+
+
+@pytest.mark.parametrize("KM", TOPOS, ids=str)
+def test_verify_broadcast_zero_conflicts_and_coverage(KM):
+    topo = D3(*KM)
+    src = (0, 0, 1)
+    rep = verify(topo, bc.m_broadcast_schedule(topo, src))
+    assert rep.ok
+    assert rep.total_steps == 5  # delegation + depth-4 tree
+    for p in range(topo.M):  # every color reaches the whole machine
+        assert rep.covered(p) | {src} == set(topo.routers())
+    # pipelined pairs: 3X/M makespan, still conflict-free
+    waves = 4
+    pipe = bc.pipelined_m_broadcast_schedule(topo, src, waves)
+    prep = verify(topo, pipe, pipelined=True)
+    assert prep.ok
+    X = waves * topo.M
+    assert prep.total_steps == 3 * X // topo.M  # 2 waves of M per 6 hops
+
+
+@pytest.mark.parametrize("KM", TOPOS, ids=str)
+def test_verify_matmul_zero_conflicts_and_sqrt_rounds(KM):
+    K, M = KM
+    gk = {4: 2, 9: 3}[K]
+    g = mm.MatmulGrid(gk, M)
+    assert (g.topo.K, g.topo.M) == (K, M)
+    sch = mm.schedule(g)
+    rep = verify(g.topo, sch)
+    assert rep.ok, rep.conflicts[:2]
+    # Theorem 1: KM = √(K²M²) rounds of 4 hops on the D3(K², M) machine
+    assert rep.num_rounds == g.n == math.isqrt(g.topo.num_routers)
+    assert rep.total_steps == 4 * rep.num_rounds
+
+
+@pytest.mark.parametrize("km", [(2, 2), (2, 3)], ids=str)
+def test_verify_hypercube_zero_conflicts_factor2(km):
+    """2·log₂ n steps: the emulation's barrier makespan is exactly twice
+    the native (k+2m)-cube ascend."""
+    sbh = hc.SBH(*km)
+    rep = verify(sbh.topo, hc.allreduce_schedule(sbh))
+    assert rep.ok, rep.conflicts[:2]
+    assert rep.num_rounds == sbh.dims == int(math.log2(sbh.num_nodes))
+    assert rep.total_steps == 2 * sbh.dims
+
+
+# ----------------------------------------------------------- price() x-check
+def test_price_matches_analytic_tables():
+    p = _da_params(4, 4)
+    sch = a2a.schedule(p)
+    assert cm.price(sch, t_w=1.0, t_s=0.0) == cm.alltoall_schedule3(4, 4, p.s)
+    g = mm.MatmulGrid(2, 4)
+    msch = mm.schedule(g)
+    assert cm.price(msch, t_w=1.0, t_s=0.5) == mm.network_time(g, g.n, 1.0, 0.5)
+    topo = D3(4, 4)
+    pipe = bc.pipelined_m_broadcast_schedule(topo, (0, 0, 0), waves=8)
+    X = pipe.meta["X"]
+    assert cm.price_pipelined(pipe, t_w=1.0, t_s=0.0) == cm.broadcast_m_tree(X, topo.M)
+
+
+def test_verify_reports_conflicts_with_location():
+    """Two packets forced onto one directed link — the report localizes it."""
+    topo = D3(2, 2)
+    rnd = vector_round(topo, [((0, 0, 0), (1, 1, 1)), ((0, 0, 0), (1, 1, 1))])
+    rep = verify(topo, Schedule("bad", topo, [rnd]))
+    assert not rep.ok
+    c = rep.conflicts[0]
+    assert len(c.packets) == 2 and topo.is_link(*c.link)
