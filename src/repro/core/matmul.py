@@ -124,17 +124,103 @@ def vector_matmul_phases(
     return [ph0, ph1, ph2, ph3]
 
 
+def round_matchings(
+    g: MatmulGrid, s: int, u: int, S: int | None = None
+) -> dict[str, object]:
+    """The executable partition of one round's 4 phases, in router-ID space —
+    the accumulation-combine metadata the runtime lowering consumes.
+
+    The paper's conflict model lets a router drive all its ports at once, so
+    a phase is *several* simultaneous matchings on a ppermute backend:
+
+      * ``bcast``  — phase 1/2 (juxtaposition): K global matchings (one per
+        destination cabinet offset t') then M-1 local matchings (one per
+        destination position v'). Receivers REPLACE their value; identity
+        hops are elided (the value is already in place).
+      * ``reduce`` — phase 3/4 (mirrored accumulation): K global matchings
+        (one per contributor block-row t) then M local matchings (one per
+        contributor position v). Receivers COMBINE (sum) arrivals into an
+        accumulator; identity pairs are KEPT — they are the local
+        contribution of a router to its own sum (an off-and-on, no link).
+      * ``zfix``   — one global-0 matching undoing the Z-swap (d ↔ p) of the
+        landing layout, the single extra hop the paper notes makes the
+        in-place variant truly in place.
+      * ``store_mask`` — router ids holding row (s,u) of the output after
+        the zfix (the same routers that launched the row of B).
+
+    Each entry is (step, pairs) with step the IR hop step (0..3; zfix = 4).
+    """
+    if S is None:
+        S = s
+    K, M = g.K, g.M
+    rid = g.topo.router_id
+    bcast: list[tuple[int, tuple]] = []
+    for t2 in range(K):  # phase 0: global juxtaposition, one matching per t'
+        pairs = []
+        for t in range(K):
+            for v in range(M):
+                a, b = g.router(s, t, u, v), g.router(t, t2, v, u)
+                if a != b:
+                    pairs.append((rid(a), rid(b)))
+        bcast.append((0, tuple(pairs)))
+    for v2 in range(M):  # phase 1: local fan-out, one matching per v'
+        if v2 == u:
+            continue  # all-identity matching: the value is already there
+        pairs = []
+        for t in range(K):
+            for t2 in range(K):
+                for v in range(M):
+                    a, b = g.router(t, t2, v, u), g.router(t, t2, v, v2)
+                    pairs.append((rid(a), rid(b)))
+        bcast.append((1, tuple(pairs)))
+    reduce_: list[tuple[int, tuple]] = []
+    for t in range(K):  # phase 2: global converge, one matching per t
+        pairs = []
+        for t2 in range(K):
+            for v in range(M):
+                for v2 in range(M):
+                    a, b = g.router(t, t2, v, v2), g.router(S, t2, v2, v)
+                    pairs.append((rid(a), rid(b)))  # identity = local add
+        reduce_.append((2, tuple(pairs)))
+    for v in range(M):  # phase 3: local converge, one matching per v
+        pairs = []
+        for t2 in range(K):
+            for v2 in range(M):
+                a, b = g.router(S, t2, v2, v), g.router(S, t2, v2, u)
+                pairs.append((rid(a), rid(b)))
+        reduce_.append((3, tuple(pairs)))
+    zfix = []
+    for t2 in range(K):  # global-0 hop: (S+t'K, v', u) -> (S+t'K, u, v')
+        for v2 in range(M):
+            a, b = g.router(S, t2, v2, u), g.router(S, t2, u, v2)
+            if a != b:
+                zfix.append((rid(a), rid(b)))
+    store = tuple(
+        sorted(rid(g.router(S, t, u, v)) for t in range(K) for v in range(M))
+    )
+    return {
+        "bcast": tuple(bcast),
+        "reduce": tuple(reduce_),
+        "zfix": (4, tuple(zfix)),
+        "store_mask": store,
+    }
+
+
 def round_ir(g: MatmulGrid, s: int, u: int, S: int | None = None) -> Round:
     """One vector-matmul round as an IR ``Round``: the 4 phases become steps
     0..3, payload = hop index within its phase (each phase's hops are
     pairwise link-distinct packets). ``startups=2`` records the two
-    off-and-ons the paper charges per round (4 t_w + 2 t_s)."""
+    off-and-ons the paper charges per round (4 t_w + 2 t_s).
+    ``meta["matmul"]`` carries the accumulation-combine partition
+    (``round_matchings``) the runtime lowers to Match/ReduceCombine stages;
+    the hop list itself stays the paper's 4-step round for verify/price."""
     hops = []
     for phase, phase_hops in enumerate(vector_matmul_phases(g, s, u, S)):
         for pkt, (a, b) in enumerate(phase_hops):
             hops.append((phase, a, b, pkt))
     return hop_round(hops, meta={"row": (s, u), "S": S if S is not None else s,
-                                 "startups": 2})
+                                 "startups": 2, "grid": (g.K, g.M),
+                                 "matmul": round_matchings(g, s, u, S)})
 
 
 def schedule(g: MatmulGrid) -> Schedule:
@@ -220,3 +306,38 @@ def rounds_for(g: MatmulGrid, n: int) -> int:
 def network_time(g: MatmulGrid, n: int, t_w: float = 1.0, t_s: float = 0.0) -> float:
     """Per paper: each round is 4 t_w + 2 t_s."""
     return rounds_for(g, n) * (4 * t_w + 2 * t_s)
+
+
+# ---------------------------------------------------------------------------
+# Block layout: matrix <-> per-router blocks (the storage map of §2).
+# ---------------------------------------------------------------------------
+
+def block_of_router(g: MatmulGrid, r: Router) -> tuple[int, int]:
+    """Router (c, d, p) -> its (block-row, block-col) = (sM+u, tM+v) with
+    s = c mod K, t = c div K, u = d, v = p."""
+    c, d, p = r
+    return (c % g.K) * g.M + d, (c // g.K) * g.M + p
+
+
+def scatter_blocks(g: MatmulGrid, mat: np.ndarray) -> np.ndarray:
+    """(N·X, N·X) matrix -> (n_routers, X, X) blocks in router-id order."""
+    N = g.n
+    if mat.shape[0] % N or mat.shape[1] % N or mat.shape[0] != mat.shape[1]:
+        raise ValueError(f"matrix side must be a multiple of N={N}: {mat.shape}")
+    X = mat.shape[0] // N
+    out = np.empty((g.topo.num_routers, X, X), mat.dtype)
+    for r in g.topo.routers():
+        i, j = block_of_router(g, r)
+        out[g.topo.router_id(r)] = mat[i * X:(i + 1) * X, j * X:(j + 1) * X]
+    return out
+
+
+def gather_blocks(g: MatmulGrid, blocks: np.ndarray) -> np.ndarray:
+    """(n_routers, X, X) blocks in router-id order -> (N·X, N·X) matrix."""
+    X = blocks.shape[1]
+    N = g.n
+    out = np.empty((N * X, N * X), blocks.dtype)
+    for r in g.topo.routers():
+        i, j = block_of_router(g, r)
+        out[i * X:(i + 1) * X, j * X:(j + 1) * X] = blocks[g.topo.router_id(r)]
+    return out

@@ -2,13 +2,17 @@
 
 Each ``dragonfly_*`` entry point is the §2–§5 schedule, emitted by the core
 algorithm module as a ``Schedule``, lowered once per layout by
-``runtime.lowering`` (cached — lowering is pure Python), and replayed by
-``runtime.executor`` as ppermutes inside the caller's shard_map. The HLO of
+``runtime.lowering.lower`` into a backend-neutral ``CollectiveProgram``
+(cached — lowering is pure Python), and replayed by a runtime backend
+(default: ``jax_ppermute``) inside the caller's shard_map. The HLO of
 ``dragonfly_all_to_all`` therefore shows the round structure literally:
-one collective-permute per source vector, K·M² in total.
+one collective-permute per source vector, K·M² in total — and
+``dragonfly_matmul`` shows Theorem 1's 4-phase rounds (no ``all_gather``).
 
-All functions run INSIDE shard_map over a 1-D axis of ``layout.n`` devices,
-device i = router ``layout.topo.id_router(i)``.
+All functions run INSIDE shard_map over a 1-D axis of ``program.n``
+devices, device i = router ``layout.topo.id_router(i)``. Pass ``backend``
+to retarget (e.g. ``JaxPpermuteBackend(overlap=True)`` for cross-round
+overlap on pipelined schedules).
 """
 
 from __future__ import annotations
@@ -16,37 +20,47 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import alltoall as a2a
 from repro.core import broadcast as bc
 from repro.core import hypercube as hc
+from repro.core import matmul as mm
 from repro.dist.mesh import DeviceLayout
-from repro.runtime import executor, lowering
+from repro.runtime import lowering
+from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
+from repro.runtime.program import CollectiveProgram
+
+_DEFAULT_BACKEND = JaxPpermuteBackend()
 
 
 # ----------------------------------------------------------- cached lowering
 @functools.lru_cache(maxsize=None)
-def _lowered_alltoall(layout: DeviceLayout) -> lowering.LoweredAllToAll:
-    return lowering.lower_alltoall(a2a.schedule(layout.da_params, layout.topo))
+def alltoall_program(layout: DeviceLayout) -> CollectiveProgram:
+    return lowering.lower(a2a.schedule(layout.da_params, layout.topo))
 
 
 @functools.lru_cache(maxsize=None)
-def _lowered_allreduce(layout: DeviceLayout) -> lowering.LoweredExchange:
+def allreduce_program(layout: DeviceLayout) -> CollectiveProgram:
     sbh = layout.sbh
     if sbh is None:
         raise ValueError(
             f"D3({layout.topo.K},{layout.topo.M}) is not a power-of-two SBH; "
             "no hypercube all-reduce schedule exists"
         )
-    return lowering.lower_exchange(hc.allreduce_schedule(sbh))
+    return lowering.lower(hc.allreduce_schedule(sbh))
 
 
 @functools.lru_cache(maxsize=None)
-def _lowered_broadcast(layout: DeviceLayout, root: int) -> lowering.LoweredBroadcast:
-    return lowering.lower_broadcast(
+def broadcast_program(layout: DeviceLayout, root: int) -> CollectiveProgram:
+    return lowering.lower(
         bc.depth3_schedule(layout.topo, layout.topo.id_router(root))
     )
+
+
+@functools.lru_cache(maxsize=None)
+def matmul_program(K: int, M: int) -> CollectiveProgram:
+    """§2 program for the K×K array of M×M blocks (K²M² devices)."""
+    return lowering.lower(mm.schedule(mm.MatmulGrid(K, M)))
 
 
 # ------------------------------------------------------------- collectives
@@ -55,35 +69,38 @@ def xla_all_to_all(x, axis_name: str):
     return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0)
 
 
-def dragonfly_all_to_all(x, axis_name: str, layout: DeviceLayout):
+def dragonfly_all_to_all(x, axis_name: str, layout: DeviceLayout, backend=None):
     """§3 doubly-parallel all-to-all: K·M²/s rounds of s ppermutes.
 
     ``x``: (n, ...) with x[j] = chunk for device j; returns (n, ...) with
     out[j] = chunk from device j (the lax.all_to_all 0/0 layout)."""
-    return executor.alltoall_on_axis(x, axis_name, _lowered_alltoall(layout))
+    be = backend or _DEFAULT_BACKEND
+    return be.alltoall(x, axis_name, alltoall_program(layout))
 
 
-def dragonfly_all_reduce(x, axis_name: str, layout: DeviceLayout):
+def dragonfly_all_reduce(x, axis_name: str, layout: DeviceLayout, backend=None):
     """§4 ascend all-reduce (sum) over the emulated hypercube."""
-    return executor.allreduce_on_axis(x, axis_name, _lowered_allreduce(layout))
+    be = backend or _DEFAULT_BACKEND
+    return be.allreduce(x, axis_name, allreduce_program(layout))
 
 
-def dragonfly_broadcast(x, axis_name: str, layout: DeviceLayout, root: int = 0):
+def dragonfly_broadcast(x, axis_name: str, layout: DeviceLayout, root: int = 0, backend=None):
     """§5 depth-3 spanning-tree broadcast from device ``root``."""
-    return executor.broadcast_on_axis(x, axis_name, _lowered_broadcast(layout, root))
+    be = backend or _DEFAULT_BACKEND
+    return be.broadcast(x, axis_name, broadcast_program(layout, root))
 
 
-def dragonfly_matmul(b_block, a_block, row_axis: str, col_axis: str):
-    """§2 block matrix product on the K×K array of M×M blocks, viewed as an
-    (N, N) device grid with N = KM.
+def dragonfly_matmul(b_block, a_block, axis_name: str, grid: tuple[int, int], backend=None):
+    """§2 block matrix product on the K×K array of M×M blocks, executed by
+    the program executor — the paper's rounds on the wire, no gather.
 
-    Device (i, j) holds blocks B[i, j] and A[i, j] and must produce
-    C[i, j] = Σ_k B[i, k] A[k, j]. The paper's round broadcasts row
-    vectors of B across the grid (phases 2.1/2.2) and converges partial
-    products (2.3); on the mesh that data movement is the row/column
-    exchange below — gather B's row i over the column axis and A's column
-    j over the row axis, then contract the X×X blocks locally (the
-    off-network compute of Theorem 2)."""
-    b_row = jax.lax.all_gather(b_block, col_axis)  # (N, X, X): B[i, k] ∀k
-    a_col = jax.lax.all_gather(a_block, row_axis)  # (N, X, X): A[k, j] ∀k
-    return jnp.einsum("kab,kbc->ac", b_row, a_col)
+    Runs INSIDE shard_map over a 1-D axis of K²M² devices in router order.
+    Device r holds the (X, X) blocks ``b_block``/``a_block`` of B and A
+    under the §2 storage map (``core.matmul.block_of_router``) and returns
+    its block of B @ A in the same map. Each round broadcasts one row
+    strip of B (phases 2.1/2.2), forms the local block products, and
+    converges them over the mirrored accumulation paths (ReduceCombine
+    matchings + the Z-fix storage hop) — Theorem 1's √n-round structure,
+    visible in the HLO as collective-permutes."""
+    be = backend or _DEFAULT_BACKEND
+    return be.matmul(b_block, a_block, axis_name, matmul_program(*grid))

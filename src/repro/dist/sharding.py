@@ -32,7 +32,9 @@ class ShardRules:
     fsdp: bool = False
     zero1: bool = False
     seq_parallel: bool = False
-    moe_collectives: str = "xla"  # "xla" | "dragonfly"
+    # "xla" (fused op) | "dragonfly" (§3 program on the ppermute backend)
+    # | "dragonfly_overlap" (same program, start_step-ordered replay)
+    moe_collectives: str = "xla"
     model_axis_size: int = 16
     data_axis_size: int = 16
 

@@ -411,7 +411,8 @@ def main(argv=None):
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
-    ap.add_argument("--moe-collectives", choices=["xla", "dragonfly"], default=None)
+    ap.add_argument("--moe-collectives",
+                    choices=["xla", "dragonfly", "dragonfly_overlap"], default=None)
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--tag", default="")
     args = ap.parse_args(argv)

@@ -7,7 +7,9 @@ The model axis doubles as the Swapped Dragonfly: ``dragonfly_for_mesh``
 views it as D3(K, M) (16 -> D3(4,2), so a pod's model axis runs the §3
 all-to-all in K·M²/s ppermute rounds), and ``make_dragonfly_mesh`` builds a
 flat 1-D mesh whose device order IS the router order — the executable form
-of the core Schedule IR via runtime/executor.py.
+of the core Schedule IR: ``runtime.lowering.lower`` emits one
+``CollectiveProgram`` per schedule and ``dragonfly_runtime_backend``
+returns the backend that replays it on the mesh.
 
 Functions, not module constants — importing this module never touches jax
 device state (the dry-run sets XLA_FLAGS before any jax import)."""
@@ -46,10 +48,21 @@ def dragonfly_for_mesh(mesh, axis: str = "model") -> DeviceLayout:
     return dragonfly_layout(axis_sizes(mesh)[axis])
 
 
+def dragonfly_runtime_backend(name: str = "jax_ppermute", *, overlap: bool = False):
+    """The runtime backend production launchers replay programs with.
+    ``overlap=True`` orders stages by ``start_step`` so pipelined rounds
+    interleave on the wire; ``name="reference"`` gives the device-free
+    NumPy replay (host-side validation of a pod's schedules)."""
+    from repro.runtime.backends import get_backend
+
+    kwargs = {"overlap": overlap} if name in ("jax", "jax_ppermute") else {}
+    return get_backend(name, **kwargs)
+
+
 def make_dragonfly_mesh(n: int | None = None, axis_name: str = "df"):
     """A flat 1-D mesh over n devices in router order, plus its layout.
 
-    Device i of the axis is router ``layout.topo.id_router(i)``; schedules
+    Device i of the axis is router ``layout.topo.id_router(i)``; programs
     lowered from the IR (runtime/lowering.py) execute on it verbatim."""
     import numpy as np
     from jax.sharding import Mesh

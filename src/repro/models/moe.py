@@ -152,9 +152,11 @@ def moe_apply_ep(params, x, cfg):
 
     The ``--collectives dragonfly`` variant swaps lax.all_to_all for the
     doubly-parallel ppermute schedule: the §3 Schedule IR emitted by
-    core/alltoall.py, lowered by runtime/lowering.py, replayed by
-    runtime/executor.py (via dist/collectives.py) — same payload,
-    K·M²/s visible rounds (see EXPERIMENTS.md §Perf).
+    core/alltoall.py, lowered to a CollectiveProgram by
+    runtime/lowering.py, replayed by the jax_ppermute backend (via
+    dist/collectives.py) — same payload, K·M²/s visible rounds (see
+    EXPERIMENTS.md §Perf). ``dragonfly_overlap`` replays the same program
+    in start_step order so independent ppermutes overlap.
     """
     from repro.dist import sharding as SH
     from repro.runtime import compat
@@ -192,14 +194,21 @@ def moe_apply_ep(params, x, cfg):
         )
         # ---- dispatch all-to-all (paper §3 boundary). "dragonfly" uses
         # the doubly-parallel round schedule (K·M²/s conflict-free rounds
-        # of ppermutes on the D3 view of the axis); "xla" the fused op.
+        # of ppermutes on the D3 view of the axis) via the program
+        # executor; "dragonfly_overlap" the same program replayed in
+        # start_step order (cross-round ppermute overlap, hiding round
+        # latency behind per-round compute); "xla" the fused op.
         buf = buf.reshape(n_model, E_loc, C_loc, d)
-        if rules.moe_collectives == "dragonfly":
+        if rules.moe_collectives.startswith("dragonfly"):
             from repro.dist.collectives import dragonfly_all_to_all
             from repro.dist.mesh import dragonfly_layout
+            from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
 
             layout = dragonfly_layout(n_model)
-            recv = dragonfly_all_to_all(buf, t_ax, layout)
+            a2a_backend = JaxPpermuteBackend(
+                overlap=rules.moe_collectives == "dragonfly_overlap"
+            )
+            recv = dragonfly_all_to_all(buf, t_ax, layout, backend=a2a_backend)
         else:
             recv = jax.lax.all_to_all(buf, t_ax, split_axis=0, concat_axis=0)
         recv = recv.transpose(1, 0, 2, 3).reshape(E_loc, n_model * C_loc, d)
@@ -209,8 +218,8 @@ def moe_apply_ep(params, x, cfg):
         y = jnp.einsum("ecf,efd->ecd", h, w_out)
         # ---- combine all-to-all
         y = y.reshape(E_loc, n_model, C_loc, d).transpose(1, 0, 2, 3)
-        if rules.moe_collectives == "dragonfly":
-            back = dragonfly_all_to_all(y, t_ax, layout)
+        if rules.moe_collectives.startswith("dragonfly"):
+            back = dragonfly_all_to_all(y, t_ax, layout, backend=a2a_backend)
         else:
             back = jax.lax.all_to_all(y, t_ax, split_axis=0, concat_axis=0)
         back = back.reshape(E, C_loc, d)

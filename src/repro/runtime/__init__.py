@@ -1,9 +1,44 @@
-"""Runtime: lowering of core Schedule IR onto real JAX device meshes.
+"""Runtime: Schedule IR -> one backend-neutral program -> pluggable backends.
 
-``lowering`` turns a ``core.schedule.Schedule`` into per-round device
-permutations / tree matchings; ``executor`` replays them as ``ppermute``
-collectives inside ``shard_map``. ``compat`` papers over jax API drift
+``lowering.lower(schedule)`` turns ANY ``core.schedule.Schedule`` — all four
+of the paper's algorithms — into a single ``program.CollectiveProgram``:
+an ordered tuple of primitive stages (``Perm`` / ``Match`` /
+``ReduceCombine`` / ``LocalContract``), each stamped with the IR
+``(round_index, step)`` it came from and a ``start_step`` launch offset so
+pipelined schedules survive lowering. ``compat`` papers over jax API drift
 (shard_map moved out of jax.experimental after 0.4.x).
+
+Backend interface contract
+--------------------------
+A backend executes programs; it never sees the IR. It must provide
+
+    run_alltoall(x, program)                 # (n, n, ...) -> (n, n, ...)
+    run_allreduce(x, program)                # (n, ...)    -> (n, ...)
+    run_broadcast(x, program, pipelined=..)  # (n, ...) or (R, n, ...) waves
+    run_matmul(B, A, program)                # (N·X, N·X) pair -> product
+
+with identical results across backends (differential-testable bit-for-bit
+on integer-valued floats). Obligations:
+
+  * replay communication stages grouped by synchronous step — every stage
+    of one ``(round_index, step)`` group reads the PRE-group values; the
+    lowering guarantees distinct write targets within a group;
+  * ``Perm``: full permutation of the per-device value; ``Match``: listed
+    destinations replace their value; ``ReduceCombine``: destinations sum
+    the arrival into an accumulator, identity pairs meaning a local (no
+    link) contribution; ``LocalContract``: the named local compute steps
+    of the matmul state machine (``load_b``/``mul_a``/``promote``/
+    ``store_c``) over per-device state (val, acc, c);
+  * honor ``pipelined``/``overlap`` by replaying in stable ``start_step``
+    order — bit-identical to barrier order for any program whose schedule
+    verified conflict-free under ``verify(pipelined=True)``;
+  * use each stage's cached host index arrays (``sigma_np`` etc.) rather
+    than rebuilding them per trace.
+
+``backends.get_backend("jax_ppermute" | "reference")`` instantiates the
+built-ins: ppermutes on a JAX mesh (optionally overlapped), and a pure-
+NumPy host replay used for differential testing and device-free
+validation.
 """
 
-from repro.runtime import compat, executor, lowering  # noqa: F401
+from repro.runtime import backends, compat, lowering, program  # noqa: F401

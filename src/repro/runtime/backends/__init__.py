@@ -1,0 +1,44 @@
+"""Pluggable execution backends for ``CollectiveProgram``s.
+
+The backend contract (see also the ``repro.runtime`` package docstring):
+every backend exposes the four whole-array entry points
+
+    run_alltoall(x, program)           (n, n, ...) -> (n, n, ...)
+    run_allreduce(x, program)          (n, ...)    -> (n, ...)
+    run_broadcast(x, program, *,       (n, ...)    -> (n, ...)   single round
+                  pipelined=False)     (R, n, ...) -> (R, n, ...) R waves
+    run_matmul(B, A, program)          two (N·X, N·X) matrices -> their product
+
+replaying the SAME lowered program, so backends are differential-testable
+against each other bit-for-bit. The JAX backend additionally exposes
+per-shard methods (``alltoall``/``allreduce``/``broadcast``/``matmul``)
+for use inside a caller's ``shard_map`` (the MoE dispatch path).
+
+Built-in backends:
+
+  * ``jax_ppermute`` — issues one ``jax.lax.ppermute`` per communication
+    stage on a 1-D device mesh in router order; ``overlap=True`` launches
+    stages in ``start_step`` order so pipelined rounds interleave on the
+    wire (cross-round overlap when the schedule's ``start_step`` permits).
+  * ``reference`` — a pure-NumPy host-side replay: no devices, no jax.
+    The ground truth for differential testing and host validation.
+
+Future backends (NCCL-style send/recv lists, Pallas ring kernels,
+emulation-backed sub-topology replay) plug in as additional modules here.
+"""
+
+from __future__ import annotations
+
+
+def get_backend(name: str = "jax_ppermute", **kwargs):
+    """Instantiate a backend by name (imports lazily so the reference
+    backend never pulls in jax)."""
+    if name in ("jax", "jax_ppermute"):
+        from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
+
+        return JaxPpermuteBackend(**kwargs)
+    if name in ("reference", "numpy"):
+        from repro.runtime.backends.reference import NumpyReferenceBackend
+
+        return NumpyReferenceBackend(**kwargs)
+    raise ValueError(f"unknown backend {name!r}")

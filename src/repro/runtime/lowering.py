@@ -1,20 +1,33 @@
-"""Mechanical lowering: Schedule IR -> device-mesh collective programs.
+"""Mechanical lowering: Schedule IR -> backend-neutral ``CollectiveProgram``.
 
-A ``Schedule``'s rounds become sequences of primitive mesh operations:
+One entry point, ``lower(schedule)``, dispatches on per-round metadata
+instead of per-algorithm functions — all four of the paper's algorithms
+arrive here as the same IR and leave as the same program type:
 
-  * a *vector round* (``meta["vectors"]``) lowers to one full device
-    permutation per vector — Property 1 makes every source vector a
-    bijection of the router set, so each vector is exactly one ``ppermute``;
-  * an *exchange round* (``meta["pairs"]``) lowers to one permutation, the
-    endpoint map of its emulation paths (hypercube dimension rounds);
-  * a *tree round* (spanning-tree hops) lowers per step into *matchings* —
-    maximal hop subsets where every device sends at most once and receives
-    at most once — each a masked partial ``ppermute``.
+  * *vector rounds* (``meta["vectors"]``) — one full device ``Perm`` per
+    source vector (Property 1 makes every vector a bijection of the router
+    set): the §3 doubly-parallel all-to-all;
+  * *exchange rounds* (``meta["pairs"]``) — one full-permutation
+    ``ReduceCombine`` per round, the endpoint involution of the §4
+    hypercube dimension exchanges (combine = sum for all-reduce);
+  * *matmul rounds* (``meta["matmul"]``) — the §2 4-phase round becomes
+    ``LocalContract('load_b')``, the juxtaposition ``Match`` matchings, a
+    ``LocalContract('mul_a')`` block product, the mirrored-accumulation
+    ``ReduceCombine`` matchings (identity pairs = local adds), accumulator
+    promotions, the Z-fix ``Match`` and a masked ``LocalContract('store_c')``;
+  * *tree rounds* (stepped spanning-tree hops, anything else) — per-step
+    maximal matchings (``Match``), the §5 broadcasts.
 
 Device index = ``topo.router_id`` (the linear c·M²+d·M+p order), so a 1-D
 mesh axis of K·M² devices is the D3 network and the conflict-freedom the
-simulator proved for the IR is exactly the claim that each lowered round's
-permutations can fly concurrently on the physical links.
+simulator proved for the IR is exactly the claim that each lowered step's
+stages can fly concurrently on the physical links.
+
+Every stage is stamped with the IR ``(round_index, step)`` it came from and
+a ``start_step``: the round's ``meta["start_step"]`` launch offset when
+present (pipelined schedules), else the barrier-replay base — so a stable
+sort by ``start_step`` IS the pipelined replay and barrier programs are
+unchanged by it.
 
 Lowering is pure Python on hashable IR — no jax imports — so it can be
 cached per (topology, schedule) and reused across traces.
@@ -22,115 +35,97 @@ cached per (topology, schedule) and reused across traces.
 
 from __future__ import annotations
 
-import dataclasses
-
 from repro.core.schedule import Round, Schedule, permutation_of_vector
 from repro.core.topology import D3
+from repro.runtime.program import (
+    CollectiveProgram,
+    LocalContract,
+    Match,
+    Perm,
+    ReduceCombine,
+    Stage,
+)
 
 
-@dataclasses.dataclass(frozen=True)
-class PermOp:
-    """One full permutation over device ids: device i sends to sigma[i]."""
-
-    pairs: tuple[tuple[int, int], ...]
-
-    @property
-    def sigma(self) -> tuple[int, ...]:
-        out = [0] * len(self.pairs)
-        for s, d in self.pairs:
-            out[s] = d
-        return tuple(out)
-
-    @property
-    def inverse(self) -> tuple[int, ...]:
-        out = [0] * len(self.pairs)
-        for s, d in self.pairs:
-            out[d] = s
-        return tuple(out)
-
-    def __post_init__(self) -> None:
-        srcs = {s for s, _ in self.pairs}
-        dsts = {d for _, d in self.pairs}
-        if len(srcs) != len(self.pairs) or dsts != srcs:
-            raise ValueError("PermOp pairs must form a permutation")
+def lower(schedule: Schedule) -> CollectiveProgram:
+    """Lower any Schedule to a ``CollectiveProgram`` by round metadata."""
+    if not schedule.rounds:
+        raise ValueError(f"empty schedule {schedule.name!r}")
+    family = _round_family(schedule.rounds[0])
+    for rnd in schedule.rounds[1:]:
+        if _round_family(rnd) != family:
+            raise ValueError(
+                f"schedule {schedule.name!r} mixes round families; "
+                f"got {family} then {_round_family(rnd)}"
+            )
+    return _LOWERERS[family](schedule)
 
 
-@dataclasses.dataclass(frozen=True)
-class MatchOp:
-    """One matching (partial permutation): receivers are masked in."""
-
-    pairs: tuple[tuple[int, int], ...]
-
-    @property
-    def dsts(self) -> tuple[int, ...]:
-        return tuple(d for _, d in self.pairs)
-
-    def __post_init__(self) -> None:
-        if len({s for s, _ in self.pairs}) != len(self.pairs):
-            raise ValueError("MatchOp sources must be distinct")
-        if len({d for _, d in self.pairs}) != len(self.pairs):
-            raise ValueError("MatchOp destinations must be distinct")
+def _round_family(rnd: Round) -> str:
+    if "vectors" in rnd.meta:
+        return "vector"
+    if "pairs" in rnd.meta:
+        return "exchange"
+    if "matmul" in rnd.meta:
+        return "matmul"
+    return "tree"
 
 
-@dataclasses.dataclass(frozen=True)
-class LoweredAllToAll:
-    n: int
-    rounds: tuple[tuple[PermOp, ...], ...]
-
-    @property
-    def num_permutes(self) -> int:
-        return sum(len(r) for r in self.rounds)
+def _round_start(rnd: Round, barrier_base: int) -> int:
+    """Launch step of a round: its pipelined offset if stamped, else the
+    barrier base — so ``start_step`` ordering replays pipelined schedules
+    and leaves barrier schedules untouched."""
+    start = rnd.meta.get("start_step")
+    return barrier_base if start is None else start
 
 
-@dataclasses.dataclass(frozen=True)
-class LoweredExchange:
-    n: int
-    rounds: tuple[PermOp, ...]
-
-
-@dataclasses.dataclass(frozen=True)
-class LoweredBroadcast:
-    n: int
-    root: int
-    stages: tuple[MatchOp, ...]
-
-
-# --------------------------------------------------------------------------
-
-def lower_alltoall(schedule: Schedule) -> LoweredAllToAll:
+# --------------------------------------------------------------- all-to-all
+def _lower_vector(schedule: Schedule) -> CollectiveProgram:
     """Each round's s vectors -> s device permutations (one ppermute each).
     K·M²/s rounds × s vectors = K·M² permutes for the full exchange."""
     topo = schedule.topo
-    rounds = []
-    for rnd in schedule.rounds:
-        vecs = rnd.meta.get("vectors")
-        if vecs is None:
-            raise ValueError(f"round lacks meta['vectors']; not a vector round: {rnd.meta}")
-        rounds.append(
-            tuple(PermOp(tuple(permutation_of_vector(topo, v))) for v in vecs)
-        )
-    return LoweredAllToAll(topo.num_routers, tuple(rounds))
+    stages: list[Stage] = []
+    base = 0
+    for i, rnd in enumerate(schedule.rounds):
+        start = _round_start(rnd, base)
+        for v in rnd.meta["vectors"]:
+            stages.append(
+                Perm(tuple(permutation_of_vector(topo, v)),
+                     round_index=i, step=0, start_step=start)
+            )
+        base += rnd.num_steps
+    return CollectiveProgram(
+        "alltoall", topo.num_routers, schedule.num_rounds, tuple(stages),
+        name=schedule.name,
+    )
 
 
-def lower_exchange(schedule: Schedule) -> LoweredExchange:
-    """One permutation per round from meta['pairs'] (hypercube dimension
-    exchanges: involutions over the node set)."""
+# ---------------------------------------------------------------- exchange
+def _lower_exchange(schedule: Schedule) -> CollectiveProgram:
+    """One full-permutation combine per round from meta['pairs'] (hypercube
+    dimension exchanges: involutions over the node set)."""
     n = schedule.topo.num_routers
-    rounds = []
-    for rnd in schedule.rounds:
-        pairs = rnd.meta.get("pairs")
-        if pairs is None:
-            raise ValueError(f"round lacks meta['pairs']: {rnd.meta}")
-        rounds.append(PermOp(tuple(pairs)))
-    return LoweredExchange(n, tuple(rounds))
+    stages: list[Stage] = []
+    base = 0
+    for i, rnd in enumerate(schedule.rounds):
+        stages.append(
+            ReduceCombine(n, tuple(rnd.meta["pairs"]),
+                          round_index=i, step=0,
+                          start_step=_round_start(rnd, base))
+        )
+        base += rnd.num_steps
+    return CollectiveProgram(
+        "allreduce", n, schedule.num_rounds, tuple(stages), name=schedule.name,
+    )
 
 
-def hops_to_matchings(topo: D3, rnd: Round) -> list[MatchOp]:
-    """Decompose a tree round's hops, step by step, into matchings. Within
-    a step a source may fan out to several children (packet duplication);
-    each fan-out degree becomes one matching. Step order is preserved so
-    data dependencies (parent before child) hold."""
-    stages: list[MatchOp] = []
+# --------------------------------------------------------------- broadcast
+def hops_to_matchings(topo: D3, rnd: Round) -> list[tuple[int, tuple]]:
+    """Decompose a tree round's hops, step by step, into (step, pairs)
+    matchings. Within a step a source may fan out to several children
+    (packet duplication); each fan-out degree becomes one matching. Step
+    order is preserved so data dependencies (parent before child) hold."""
+    out: list[tuple[int, tuple]] = []
     for step in range(rnd.num_steps):
         remaining = [(topo.router_id(h.src), topo.router_id(h.dst)) for h in rnd.hops_at(step)]
         while remaining:
@@ -145,18 +140,130 @@ def hops_to_matchings(topo: D3, rnd: Round) -> list[MatchOp]:
                     matching.append((s, d))
                 else:
                     rest.append((s, d))
-            stages.append(MatchOp(tuple(matching)))
+            out.append((step, tuple(matching)))
             remaining = rest
-    return stages
+    return out
 
 
-def lower_broadcast(schedule: Schedule) -> LoweredBroadcast:
-    """A (single-round) spanning-tree schedule -> ordered masked matchings."""
-    topo = schedule.topo
-    if schedule.num_rounds != 1:
-        raise ValueError("lower_broadcast expects a single-round tree schedule")
-    root = schedule.meta.get("root") or schedule.meta.get("source")
+def _broadcast_root(schedule: Schedule) -> int:
+    """Resolve the root device id. Explicit ``is None`` checks: router id 0
+    and router (0, 0, 0) are legitimate falsy-looking roots."""
+    root = schedule.meta.get("root")
     if root is None:
-        raise ValueError("broadcast schedule lacks meta['root']/['source']")
-    stages = hops_to_matchings(topo, schedule.rounds[0])
-    return LoweredBroadcast(topo.num_routers, topo.router_id(root), tuple(stages))
+        root = schedule.meta.get("source")
+    if root is None:
+        raise ValueError(
+            f"broadcast schedule {schedule.name!r} lacks meta['root']/['source']"
+        )
+    if isinstance(root, int):
+        return root
+    return schedule.topo.router_id(root)
+
+
+def _lower_tree(schedule: Schedule) -> CollectiveProgram:
+    """Spanning-tree rounds -> ordered masked matchings. Multi-round
+    schedules are pipelined broadcast waves: round w's stages act on wave
+    slice w and carry its ``start_step`` launch offset."""
+    topo = schedule.topo
+    n = topo.num_routers
+    stages: list[Stage] = []
+    base = 0
+    for i, rnd in enumerate(schedule.rounds):
+        start = _round_start(rnd, base)
+        for step, pairs in hops_to_matchings(topo, rnd):
+            stages.append(Match(n, pairs, round_index=i, step=step,
+                                start_step=start + step))
+        base += rnd.num_steps
+    return CollectiveProgram(
+        "broadcast", n, schedule.num_rounds, tuple(stages),
+        root=_broadcast_root(schedule), name=schedule.name,
+    )
+
+
+# ------------------------------------------------------------------ matmul
+def _lower_matmul(schedule: Schedule) -> CollectiveProgram:
+    """§2 rounds -> the program the paper's Theorem 1 executes per row:
+
+        load_b; K+M-1 bcast matchings; mul_a; K+M reduce-combines;
+        promote; zfix match; store_c(mask)
+
+    with a ``promote`` between the global and nothing else — the two
+    accumulator promotions realize the paper's two off-and-ons."""
+    topo = schedule.topo
+    n = topo.num_routers
+    grid = None
+    stages: list[Stage] = []
+    base = 0
+    for i, rnd in enumerate(schedule.rounds):
+        mm = rnd.meta["matmul"]
+        grid = rnd.meta.get("grid", grid)
+        start = _round_start(rnd, base)
+        stages.append(LocalContract("load_b", round_index=i, step=0,
+                                    start_step=start))
+        for step, pairs in mm["bcast"]:
+            stages.append(Match(n, pairs, round_index=i, step=step,
+                                start_step=start + step))
+        stages.append(LocalContract("mul_a", round_index=i, step=2,
+                                    start_step=start + 2))
+        glob = [sp for sp in mm["reduce"] if sp[0] == 2]
+        loc = [sp for sp in mm["reduce"] if sp[0] != 2]
+        for step, pairs in glob:
+            stages.append(ReduceCombine(n, pairs, round_index=i, step=step,
+                                        start_step=start + step))
+        stages.append(LocalContract("promote", round_index=i, step=3,
+                                    start_step=start + 3))
+        for step, pairs in loc:
+            stages.append(ReduceCombine(n, pairs, round_index=i, step=step,
+                                        start_step=start + step))
+        stages.append(LocalContract("promote", round_index=i, step=4,
+                                    start_step=start + 4))
+        zstep, zpairs = mm["zfix"]
+        if zpairs:
+            stages.append(Match(n, zpairs, round_index=i, step=zstep,
+                                start_step=start + zstep))
+        stages.append(LocalContract("store_c", mask=mm["store_mask"], n=n,
+                                    round_index=i, step=zstep + 1,
+                                    start_step=start + zstep + 1))
+        base += rnd.num_steps + 1  # + the zfix storage hop
+    return CollectiveProgram(
+        "matmul", n, schedule.num_rounds, tuple(stages), grid=grid,
+        name=schedule.name,
+    )
+
+
+_LOWERERS = {
+    "vector": _lower_vector,
+    "exchange": _lower_exchange,
+    "tree": _lower_tree,
+    "matmul": _lower_matmul,
+}
+
+
+# ---------------------------------------------------------------------------
+# Named entry points retained as thin wrappers over ``lower`` — they assert
+# the caller got the program family it expected.
+# ---------------------------------------------------------------------------
+
+def _expect(schedule: Schedule, kind: str) -> CollectiveProgram:
+    prog = lower(schedule)
+    if prog.kind != kind:
+        raise ValueError(
+            f"schedule {schedule.name!r} lowered to {prog.kind!r}, expected {kind!r}"
+        )
+    return prog
+
+
+def lower_alltoall(schedule: Schedule) -> CollectiveProgram:
+    return _expect(schedule, "alltoall")
+
+
+def lower_exchange(schedule: Schedule) -> CollectiveProgram:
+    return _expect(schedule, "allreduce")
+
+
+def lower_broadcast(schedule: Schedule) -> CollectiveProgram:
+    return _expect(schedule, "broadcast")
+
+
+def lower_matmul(schedule: Schedule) -> CollectiveProgram:
+    return _expect(schedule, "matmul")

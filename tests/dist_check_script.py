@@ -99,28 +99,37 @@ def check_broadcast():
 
 
 def check_matmul():
-    # D3(K²,M) with K=2, M=2: grid axis N = KM = 4, devices = N² = 16
+    # D3(K²,M) with K=2, M=2: 16 routers = 16 devices in router order.
+    # The §2 rounds run on the program executor — ppermutes, no gather.
+    from repro.core.matmul import MatmulGrid, gather_blocks, scatter_blocks
+
     K, M = 2, 2
-    N = K * M
+    grid = MatmulGrid(K, M)
+    prog = coll.matmul_program(K, M)
+    assert prog.n == 16
+    mesh = get_mesh(16)
     b = 8  # block size: Theorem 2's X blocks
-    mesh = Mesh(np.array(jax.devices()[:16]).reshape(N, N), ("row", "col"))
     rng = np.random.default_rng(3)
-    Bmat = rng.standard_normal((N * b, N * b)).astype(np.float32)
-    Amat = rng.standard_normal((N * b, N * b)).astype(np.float32)
+    side = grid.n * b
+    # integer-valued floats: the round-structured sum is bit-exact vs einsum
+    Bmat = rng.integers(-4, 5, (side, side)).astype(np.float32)
+    Amat = rng.integers(-4, 5, (side, side)).astype(np.float32)
+    bb = jnp.asarray(scatter_blocks(grid, Bmat))
+    aa = jnp.asarray(scatter_blocks(grid, Amat))
 
-    @jax.jit
-    def run(Bm, Am):
-        f = shard_map(
-            lambda bb, aa: coll.dragonfly_matmul(bb, aa, "row", "col"),
-            mesh=mesh,
-            in_specs=(P("row", "col"), P("row", "col")),
-            out_specs=P("row", "col"),
+    f = jax.jit(
+        shard_map(
+            lambda x, y: coll.dragonfly_matmul(x[0], y[0], "x", (K, M))[None],
+            mesh=mesh, in_specs=(P("x"), P("x")), out_specs=P("x"),
         )
-        return f(Bm, Am)
-
-    got = np.asarray(run(Bmat, Amat))
-    np.testing.assert_allclose(got, Bmat @ Amat, rtol=2e-4, atol=1e-4)
-    print("matmul OK")
+    )
+    got = gather_blocks(grid, np.asarray(f(bb, aa)))
+    want = np.asarray(jnp.einsum("ij,jk->ik", jnp.asarray(Bmat), jnp.asarray(Amat)))
+    np.testing.assert_array_equal(got, want)  # bit-exact, zero tolerance
+    txt = f.lower(bb, aa).as_text()
+    n_gather = txt.count("all_gather") + txt.count("all-gather")
+    assert n_gather == 0, f"dragonfly_matmul must not lower to all-gather ({n_gather})"
+    print("matmul OK (program executor, bit-exact, no all-gather)")
 
 
 def check_ppermute_round_count():

@@ -1,0 +1,145 @@
+"""Backend equivalence checks — run as a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count=32 (set before jax import;
+see test_runtime_program.py). Exits 0 on success.
+
+The acceptance bar:
+
+  * the NumPy reference backend and the JAX ppermute backend agree
+    bit-for-bit on all four algorithms' programs at (K,M) ∈ {(4,2), (2,4)};
+  * ``dragonfly_matmul`` executes the §2 rounds via the program executor —
+    bit-exact vs ``jnp.einsum`` on a CPU device mesh, and its HLO contains
+    collective-permutes but NO all-gather;
+  * pipelined (start_step-ordered) execution of the §5 wave schedule on
+    devices is bit-identical to barrier replay.
+
+(n = K²M² routers means no §2 grid has exactly 8 devices — the smallest
+non-degenerate grid (2,2) is the 16-device mesh checked here; grid (2,1)
+runs on 4 of 8 devices in runtime_check_script.py.)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=32")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import alltoall as a2a
+from repro.core import broadcast as bc
+from repro.core import hypercube as hc
+from repro.core import matmul as mm
+from repro.core.topology import D3
+from repro.dist.mesh import DeviceLayout
+from repro.runtime import compat, lowering
+from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
+from repro.runtime.backends.reference import NumpyReferenceBackend
+
+JAXBE = JaxPpermuteBackend()
+REF = NumpyReferenceBackend()
+
+
+def mesh_of(n):
+    return Mesh(np.array(jax.devices()[:n]), ("df",))
+
+
+def check_differential(K, M):
+    """Reference and JAX backends agree bit-for-bit on the §3/§4/§5
+    programs of D3(K, M) (broadcast from router id 0 — the falsy root)."""
+    layout = DeviceLayout(D3(K, M))
+    n = layout.n
+    mesh = mesh_of(n)
+    rng = np.random.default_rng(0)
+
+    prog = lowering.lower(a2a.schedule(layout.da_params, layout.topo))
+    x = rng.standard_normal((n, n, 3)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(JAXBE.run_alltoall(x, prog, mesh=mesh)),
+        REF.run_alltoall(x, prog),
+    )
+
+    prog = lowering.lower(hc.allreduce_schedule(layout.sbh))
+    xr = rng.standard_normal((n, 4)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(JAXBE.run_allreduce(xr, prog, mesh=mesh)),
+        REF.run_allreduce(xr, prog),
+    )
+
+    prog = lowering.lower(bc.depth3_schedule(layout.topo, layout.topo.id_router(0)))
+    assert prog.root == 0
+    np.testing.assert_array_equal(
+        np.asarray(JAXBE.run_broadcast(xr, prog, mesh=mesh)),
+        REF.run_broadcast(xr, prog),
+    )
+    print(f"differential D3({K},{M}) OK (alltoall/allreduce/broadcast, n={n})")
+
+
+def check_matmul_differential(K, M, X):
+    """§2 on the program executor: JAX == reference == jnp.einsum,
+    bit-exact (integer-valued float32)."""
+    g = mm.MatmulGrid(K, M)
+    prog = lowering.lower(mm.schedule(g))
+    rng = np.random.default_rng(1)
+    N = g.n * X
+    B = rng.integers(-4, 5, (N, N)).astype(np.float32)
+    A = rng.integers(-4, 5, (N, N)).astype(np.float32)
+    got = JAXBE.run_matmul(B, A, prog, mesh=mesh_of(prog.n))
+    want = np.asarray(jnp.einsum("ij,jk->ik", jnp.asarray(B), jnp.asarray(A)))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got, REF.run_matmul(B, A, prog))
+    print(f"matmul grid ({K},{M}) X={X} OK (n={prog.n}, bit-exact vs einsum)")
+
+
+def check_matmul_hlo_no_gather():
+    """The §2 round structure is on the wire: the dragonfly_matmul HLO has
+    one collective-permute per program stage and NO all-gather."""
+    from repro.dist import collectives as coll
+
+    prog = coll.matmul_program(2, 2)
+    mesh = mesh_of(prog.n)
+    b = jnp.zeros((prog.n, 2, 2), jnp.float32)
+    f = jax.jit(
+        compat.shard_map(
+            lambda bb, aa: coll.dragonfly_matmul(bb[0], aa[0], "df", (2, 2))[None],
+            mesh=mesh, in_specs=(P("df"), P("df")), out_specs=P("df"),
+        )
+    )
+    txt = f.lower(b, b).as_text()
+    n_perm = txt.count("collective_permute") + txt.count("collective-permute")
+    n_gather = txt.count("all_gather") + txt.count("all-gather")
+    assert n_perm >= prog.num_permutes, (n_perm, prog.num_permutes)
+    assert n_gather == 0, f"matmul program must not lower to all-gather ({n_gather})"
+    print(f"matmul HLO OK ({n_perm} collective-permutes, 0 all-gathers)")
+
+
+def check_pipelined_broadcast_on_device():
+    """start_step replay on the mesh == barrier replay == reference."""
+    topo = D3(4, 2)
+    prog = lowering.lower(bc.pipelined_m_broadcast_schedule(topo, (0, 0, 1), waves=4))
+    mesh = mesh_of(prog.n)
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((prog.num_rounds, prog.n, 3)).astype(np.float32)
+    bar = np.asarray(JAXBE.run_broadcast(x, prog, mesh=mesh))
+    pip = np.asarray(JAXBE.run_broadcast(x, prog, mesh=mesh, pipelined=True))
+    np.testing.assert_array_equal(bar, pip)
+    np.testing.assert_array_equal(bar, REF.run_broadcast(x, prog, pipelined=True))
+    np.testing.assert_array_equal(
+        bar, np.broadcast_to(x[:, prog.root][:, None], x.shape)
+    )
+    print(f"pipelined broadcast OK (waves={prog.num_rounds}, "
+          f"makespan {prog.max_start_step + 1} vs barrier "
+          f"{sum(6 for _ in range(prog.num_rounds))})")
+
+
+if __name__ == "__main__":
+    assert jax.device_count() >= 32, jax.device_count()
+    check_differential(4, 2)
+    check_differential(2, 4)
+    # §2 grids: D3(4,2) is grid (2,2); no grid has K²M² = 2·16 (K must be a
+    # perfect square), so (1,4) is the second matmul case.
+    check_matmul_differential(2, 2, X=2)
+    check_matmul_differential(1, 4, X=1)
+    check_matmul_hlo_no_gather()
+    check_pipelined_broadcast_on_device()
+    print("ALL PROGRAM CHECKS PASSED")

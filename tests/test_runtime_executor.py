@@ -4,7 +4,8 @@ Pure-python lowering invariants run in-process; the device executor runs in
 a subprocess with 8 forced host devices (the main pytest process must keep
 1 device), asserting the lowered §3 all-to-all is bit-exact against
 jax.lax.all_to_all — the IR is not just verifiable, it is the thing that
-executes.
+executes. Program-layer semantics and backend differentials live in
+test_runtime_program.py.
 """
 
 import os
@@ -29,35 +30,40 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 def test_lower_alltoall_permutation_structure(KM):
     layout = DeviceLayout(D3(*KM))
     p = layout.da_params
-    low = lowering.lower_alltoall(a2a.schedule(p, layout.topo))
-    assert low.n == layout.n
+    prog = lowering.lower(a2a.schedule(p, layout.topo))
+    assert prog.kind == "alltoall"
+    assert prog.n == layout.n
     # K·M²/s rounds of s full permutations = K·M² ppermutes
-    assert len(low.rounds) == p.total_rounds
-    assert low.num_permutes == p.K * p.M * p.M
-    for rnd in low.rounds:
+    assert prog.num_rounds == p.total_rounds
+    assert prog.num_permutes == p.K * p.M * p.M
+    for rnd in prog.perm_rounds:
         assert len(rnd) == p.s
         for op in rnd:
             sigma = op.sigma
-            assert sorted(sigma) == list(range(low.n))  # bijection
+            assert sorted(sigma) == list(range(prog.n))  # bijection
             inv = op.inverse
-            assert all(inv[sigma[i]] == i for i in range(low.n))
+            assert all(inv[sigma[i]] == i for i in range(prog.n))
 
 
 def test_lower_exchange_involutions():
     sbh = hc.SBH(2, 2)
-    low = lowering.lower_exchange(hc.allreduce_schedule(sbh))
-    assert len(low.rounds) == sbh.dims
-    for op in low.rounds:
-        sigma = op.sigma
-        assert all(sigma[sigma[i]] == i and sigma[i] != i for i in range(low.n))
+    prog = lowering.lower(hc.allreduce_schedule(sbh))
+    assert prog.kind == "allreduce"
+    assert prog.num_rounds == sbh.dims
+    assert len(prog.comm_stages) == sbh.dims
+    for op in prog.comm_stages:
+        assert op.is_full_permutation
+        pairs = dict(op.pairs)
+        assert all(pairs[pairs[s]] == s and pairs[s] != s for s in pairs)
 
 
 def test_lower_broadcast_matchings_cover_all_devices():
     topo = D3(4, 4)
     root = (0, 0, 1)
-    low = lowering.lower_broadcast(bc.depth3_schedule(topo, root))
-    reached = {low.root}
-    for stage in low.stages:
+    prog = lowering.lower(bc.depth3_schedule(topo, root))
+    assert prog.kind == "broadcast"
+    reached = {prog.root}
+    for stage in prog.stages:
         srcs = [s for s, _ in stage.pairs]
         dsts = [d for _, d in stage.pairs]
         assert len(set(srcs)) == len(srcs) and len(set(dsts)) == len(dsts)
@@ -67,11 +73,14 @@ def test_lower_broadcast_matchings_cover_all_devices():
     assert reached == set(range(topo.num_routers))
 
 
-def test_lowering_rejects_non_permutation():
-    with pytest.raises(ValueError):
-        lowering.PermOp(((0, 1), (1, 1)))
-    with pytest.raises(ValueError):
-        lowering.MatchOp(((0, 1), (0, 2)))
+def test_barrier_start_steps_accumulate():
+    """Non-pipelined schedules get barrier-base start_steps, so pipelined
+    (start_step-ordered) replay degenerates to program order."""
+    layout = DeviceLayout(D3(2, 2))
+    prog = lowering.lower(a2a.schedule(layout.da_params, layout.topo))
+    starts = [s.start_step for s in prog.stages]
+    assert starts == sorted(starts)
+    assert prog.pipelined_stages() == prog.stages
 
 
 def test_dragonfly_layout_8_devices():

@@ -1,0 +1,246 @@
+"""The backend-neutral program layer: one ``lower()`` for all four
+algorithms, stage invariants, the NumPy reference backend vs analytic
+oracles, and pipelined (start_step) replay — all host-side, no devices.
+
+The reference-vs-JAX differential and on-device matmul checks run in a
+subprocess with forced host devices (``program_check_script.py``).
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import alltoall as a2a
+from repro.core import broadcast as bc
+from repro.core import hypercube as hc
+from repro.core import matmul as mm
+from repro.core.schedule import Schedule, hop_round
+from repro.core.topology import D3
+from repro.dist.mesh import DeviceLayout
+from repro.runtime import lowering
+from repro.runtime.backends import get_backend
+from repro.runtime.backends.reference import NumpyReferenceBackend
+from repro.runtime.program import (
+    CollectiveProgram,
+    LocalContract,
+    Match,
+    Perm,
+    ReduceCombine,
+)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+REF = NumpyReferenceBackend()
+
+
+def _programs_for(K, M):
+    layout = DeviceLayout(D3(K, M))
+    return layout, {
+        "alltoall": lowering.lower(a2a.schedule(layout.da_params, layout.topo)),
+        "allreduce": lowering.lower(hc.allreduce_schedule(layout.sbh)),
+        "broadcast": lowering.lower(bc.depth3_schedule(layout.topo, (0, 1, 0))),
+    }
+
+
+# --------------------------------------------------------- one entry point
+@pytest.mark.parametrize("KM", [(4, 2), (2, 4)], ids=str)
+def test_lower_dispatches_all_four_families(KM):
+    layout, progs = _programs_for(*KM)
+    progs["matmul"] = lowering.lower(mm.schedule(mm.MatmulGrid(2, 2)))
+    for kind, prog in progs.items():
+        assert isinstance(prog, CollectiveProgram)
+        assert prog.kind == kind
+    assert progs["alltoall"].n == layout.n
+    assert all(isinstance(s, Perm) for s in progs["alltoall"].stages)
+    assert all(isinstance(s, ReduceCombine) for s in progs["allreduce"].stages)
+    assert all(isinstance(s, Match) for s in progs["broadcast"].stages)
+
+
+def test_lower_rejects_mixed_families():
+    topo = D3(2, 2)
+    r_vec = next(iter(a2a.iter_round_irs(DeviceLayout(topo).da_params, topo)))
+    r_tree = bc.depth3_schedule(topo, (0, 0, 0)).rounds[0]
+    with pytest.raises(ValueError, match="mixes round families"):
+        lowering.lower(Schedule("mixed", topo, [r_vec, r_tree]))
+    with pytest.raises(ValueError, match="empty"):
+        lowering.lower(Schedule("empty", topo, []))
+
+
+def test_named_wrappers_enforce_kind():
+    topo = D3(2, 2)
+    sched = bc.depth3_schedule(topo, (0, 0, 0))
+    with pytest.raises(ValueError, match="expected 'alltoall'"):
+        lowering.lower_alltoall(sched)
+    assert lowering.lower_broadcast(sched).kind == "broadcast"
+
+
+# ------------------------------------------------------------ stage checks
+def test_stage_validation():
+    with pytest.raises(ValueError):
+        Perm(((0, 1), (1, 1)))
+    with pytest.raises(ValueError):
+        Match(3, ((0, 1), (0, 2)))
+    with pytest.raises(ValueError):
+        Match(3, ((0, 0),))  # identity pairs must be elided
+    ReduceCombine(3, ((0, 0), (1, 2)))  # identity = local contribution: ok
+    with pytest.raises(ValueError):
+        ReduceCombine(3, ((0, 1),), combine="max")
+    with pytest.raises(ValueError):
+        LocalContract("unknown_fn")
+    with pytest.raises(ValueError):
+        CollectiveProgram("nonsense", 4, 1, ())
+
+
+def test_perm_index_arrays_are_cached_across_accesses():
+    """Satellite: σ/σ⁻¹ host arrays are built once per stage (cached
+    property), not rebuilt inside every jit trace."""
+    layout, progs = _programs_for(4, 2)
+    op = progs["alltoall"].stages[0]
+    assert op.sigma_np is op.sigma_np
+    assert op.inverse_np is op.inverse_np
+    assert op.sigma_np.dtype == np.int32
+    assert sorted(op.sigma) == list(range(layout.n))
+    assert all(op.inverse[op.sigma[i]] == i for i in range(layout.n))
+
+
+# ------------------------------------------------- falsy-root regression
+def test_broadcast_root_zero_not_dropped():
+    """Regression: ``meta.get("root") or meta.get("source")`` dropped a
+    legitimate root of 0. Root router id 0 must lower and execute."""
+    topo = D3(4, 2)
+    n = topo.num_routers
+    # int device id 0 in meta (the falsy case the old `or` chain dropped)
+    tree = bc.depth3_tree(topo, (0, 0, 0))
+    sched = Schedule(
+        "bcast_root0", topo,
+        [hop_round([(s, a, b, 0) for s, a, b in tree])],
+        meta={"root": 0},
+    )
+    prog = lowering.lower(sched)
+    assert prog.root == 0
+    x = np.random.default_rng(0).standard_normal((n, 3))
+    out = REF.run_broadcast(x, prog)
+    np.testing.assert_array_equal(out, np.broadcast_to(x[0], x.shape))
+    # router-tuple root (0, 0, 0) — falsy-looking but must resolve to id 0
+    prog2 = lowering.lower(bc.depth3_schedule(topo, (0, 0, 0)))
+    assert prog2.root == 0
+    # a schedule with neither key still errors
+    with pytest.raises(ValueError, match="root"):
+        lowering.lower(Schedule("no_root", topo, [hop_round([(0, (0, 0, 0), (0, 0, 1), 0)])]))
+
+
+# ------------------------------------------- reference backend vs oracles
+@pytest.mark.parametrize("KM", [(4, 2), (2, 4)], ids=str)
+def test_reference_backend_matches_analytic_results(KM):
+    layout, progs = _programs_for(*KM)
+    n = layout.n
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((n, n, 3))
+    np.testing.assert_array_equal(
+        REF.run_alltoall(x, progs["alltoall"]), x.transpose(1, 0, 2)
+    )
+    xr = rng.standard_normal((n, 4))
+    np.testing.assert_allclose(
+        REF.run_allreduce(xr, progs["allreduce"]),
+        np.broadcast_to(xr.sum(0), xr.shape), rtol=1e-12,
+    )
+    root = progs["broadcast"].root
+    np.testing.assert_array_equal(
+        REF.run_broadcast(xr, progs["broadcast"]),
+        np.broadcast_to(xr[root], xr.shape),
+    )
+
+
+@pytest.mark.parametrize("grid,X", [((2, 2), 1), ((2, 2), 3), ((1, 4), 2), ((3, 2), 1)], ids=str)
+def test_reference_matmul_bit_exact(grid, X):
+    """§2 via program replay == B @ A, bit-exact on integer-valued floats,
+    and identical to the literal per-round data-movement simulation."""
+    g = mm.MatmulGrid(*grid)
+    prog = lowering.lower(mm.schedule(g))
+    rng = np.random.default_rng(2)
+    N = g.n * X
+    B = rng.integers(-4, 5, (N, N)).astype(np.float64)
+    A = rng.integers(-4, 5, (N, N)).astype(np.float64)
+    C = REF.run_matmul(B, A, prog)
+    np.testing.assert_array_equal(C, B @ A)
+    if X == 1:
+        np.testing.assert_array_equal(C, mm.simulate_matmul(g, B, A))
+
+
+def test_matmul_program_structure():
+    """Theorem 1 projected onto the program: KM rounds, each K+M-1
+    broadcast matchings + K+M accumulation combines + the Z-fix hop, with
+    identity combine pairs carrying the local (off-and-on) adds."""
+    g = mm.MatmulGrid(2, 2)
+    prog = lowering.lower(mm.schedule(g))
+    assert prog.kind == "matmul" and prog.grid == (2, 2)
+    assert prog.num_rounds == g.K * g.M  # = √n rounds on n = (KM)² routers
+    for i in range(prog.num_rounds):
+        sts = prog.stages_of_round(i)
+        matches = [s for s in sts if isinstance(s, Match)]
+        combines = [s for s in sts if isinstance(s, ReduceCombine)]
+        locals_ = [s for s in sts if isinstance(s, LocalContract)]
+        assert len(matches) == g.K + (g.M - 1) + 1  # bcast g, bcast l, zfix
+        assert len(combines) == g.K + g.M
+        assert [l.fn for l in locals_] == ["load_b", "mul_a", "promote", "promote", "store_c"]
+        assert any(s == d for c in combines for (s, d) in c.pairs)
+        store = locals_[-1]
+        assert store.mask is not None and len(store.mask) == g.K * g.M
+
+
+# --------------------------------------------------- pipelined replay
+def test_pipelined_broadcast_matches_barrier_replay():
+    """§5 pipelined waves: start_step-ordered replay interleaves rounds yet
+    is bit-identical to barrier replay (the IR verified it conflict-free
+    under ``verify(pipelined=True)``)."""
+    topo = D3(4, 2)
+    sched = bc.pipelined_m_broadcast_schedule(topo, (0, 0, 1), waves=4)
+    prog = lowering.lower(sched)
+    assert prog.num_rounds == 4
+    # stamps survive lowering: wave w launches at (w//2)*6 + (w%2)
+    starts = sorted({s.start_step - s.step for s in prog.stages_of_round(3)})
+    assert starts == [sched.rounds[3].meta["start_step"]]
+    # the pipelined order genuinely interleaves rounds...
+    order = [s.round_index for s in prog.pipelined_stages()]
+    assert order != sorted(order)
+    # ...and the makespan contracts vs barrier replay
+    barrier_span = sum(r.num_steps for r in sched.rounds)
+    assert prog.max_start_step + 1 < barrier_span
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((prog.num_rounds, topo.num_routers, 3))
+    bar = REF.run_broadcast(x, prog)
+    pip = REF.run_broadcast(x, prog, pipelined=True)
+    np.testing.assert_array_equal(bar, pip)
+    np.testing.assert_array_equal(
+        bar, np.broadcast_to(x[:, prog.root][:, None], x.shape)
+    )
+
+
+def test_backend_registry():
+    assert isinstance(get_backend("reference"), NumpyReferenceBackend)
+    with pytest.raises(ValueError):
+        get_backend("nccl")  # not built in (yet) — see runtime/backends
+
+
+# --------------------------------------------------------- device check
+@pytest.mark.slow
+def test_program_backends_32dev():
+    """Differential reference-vs-JAX on all four programs at (K,M) ∈
+    {(4,2), (2,4)}, §2 matmul bit-exact vs jnp.einsum on a device mesh,
+    and pipelined broadcast vs barrier replay — in a subprocess with 32
+    forced host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "program_check_script.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL PROGRAM CHECKS PASSED" in proc.stdout
