@@ -113,6 +113,54 @@ def bench_backends(log=print):
     log(f"matmul_program,backend=dragonfly,grid=2x2,X={X},rounds={mprog.num_rounds},us_per_call={us:.0f}")
 
 
+def bench_emulation_rewrite(log=print):
+    """Guest-on-host rewrite overhead (the elastic-failover hot path):
+
+      * ``native_lowering``  — derive + lower the guest schedule from
+        scratch (what recovery used to do);
+      * ``rewrite_cold``     — relabel the already-lowered guest program
+        through the embedding (what recovery does now), cache cleared;
+      * ``rewrite_cached``   — the same call hitting the lru cache (what
+        repeated failovers onto one survivor set pay);
+      * ``replay_overhead``  — reference-backend replay of the rewritten
+        host-sized program vs the native guest program (idle devices cost).
+    """
+    from repro.core import alltoall as a2a
+    from repro.core.topology import D3
+    from repro.dist.mesh import DeviceLayout
+    from repro.runtime import lowering, rewrite
+    from repro.runtime.backends.reference import NumpyReferenceBackend
+
+    ref = NumpyReferenceBackend()
+    for (J, L), (K, M) in (((2, 2), (4, 4)), ((4, 4), (4, 8))):
+        guest = DeviceLayout(D3(J, L))
+        emb = guest.embed_onto(DeviceLayout(D3(K, M)))
+        tag = f"guest={J}x{L},host={K}x{M}"
+
+        _, us = _timed(lambda: lowering.lower(a2a.schedule(guest.da_params, guest.topo)))
+        log(f"emulation_rewrite,path=native_lowering,{tag},us_per_call={us:.0f}")
+
+        prog = lowering.lower(a2a.schedule(guest.da_params, guest.topo))
+
+        def cold():
+            rewrite.emulate.cache_clear()
+            return rewrite.emulate(prog, emb)
+
+        hprog, us = _timed(cold)
+        log(f"emulation_rewrite,path=rewrite_cold,{tag},"
+            f"stages={hprog.num_permutes},us_per_call={us:.0f}")
+        _, us = _timed(lambda: rewrite.emulate(prog, emb))
+        log(f"emulation_rewrite,path=rewrite_cached,{tag},us_per_call={us:.0f}")
+
+        rng = np.random.default_rng(0)
+        xg = rng.standard_normal((prog.n, prog.n, 8)).astype(np.float32)
+        xh = rewrite.scatter_guest(xg, hprog, axes=(0, 1))
+        _, us = _timed(lambda: ref.run_alltoall(xg, prog))
+        log(f"emulation_rewrite,path=replay_native,{tag},us_per_call={us:.0f}")
+        _, us = _timed(lambda: ref.run_alltoall(xh, hprog))
+        log(f"emulation_rewrite,path=replay_rewritten,{tag},us_per_call={us:.0f}")
+
+
 def bench_core_micro(log=print):
     """Schedule-generation throughput (rounds/s) — the control-plane cost
     of the paper's algorithms at pod scale (D3(4,8) = 256 chips)."""
@@ -232,6 +280,8 @@ def main(argv=None) -> None:
     bench_schedule_lowering(log)
     print("# ---- runtime backends (dragonfly vs fused XLA vs reference)")
     bench_backends(log)
+    print("# ---- emulation rewrite (guest-on-host vs native lowering)")
+    bench_emulation_rewrite(log)
     bench_core_micro(log)
     bench_kernels(log)
     bench_train_smoke(log)

@@ -11,13 +11,18 @@ legal global port. Same for local ports within P.
 
 This is the framework's *elastic scaling* mechanism: when chips die, the
 runtime selects the largest (J, L) with J ≤ K, L ≤ M such that a healthy
-C × P × P router set exists, re-derives every schedule on D3(J, L), and
-re-shards. See train/fault_tolerance.py.
+C × P × P router set exists and REWRITES the already-lowered D3(J, L)
+programs onto the survivors through ``Embedding.device_map`` (the
+program-to-program pass in ``runtime.rewrite``) — recovery never re-derives
+schedules. See train/fault_tolerance.py.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from functools import cached_property
+
+import numpy as np
 
 from repro.core.topology import D3, Router
 
@@ -36,10 +41,38 @@ class Embedding:
             raise ValueError("subset sizes must match guest dimensions")
         if len(set(self.c_set)) != len(self.c_set) or len(set(self.p_set)) != len(self.p_set):
             raise ValueError("subsets must be duplicate-free")
+        if not all(0 <= c < self.host.K for c in self.c_set):
+            raise ValueError(f"c_set {self.c_set} out of range for K={self.host.K}")
+        if not all(0 <= p < self.host.M for p in self.p_set):
+            raise ValueError(f"p_set {self.p_set} out of range for M={self.host.M}")
 
     def map_router(self, r: Router) -> Router:
         c, d, p = r
         return (self.c_set[c], self.p_set[d], self.p_set[p])
+
+    # ------------------------------------------------- vectorized device maps
+    @cached_property
+    def device_map(self) -> np.ndarray:
+        """``device_map[g]`` = host router id of guest router id ``g`` —
+        the whole embedding as one int32 gather, built once and cached
+        (hash/eq of the frozen dataclass ignore the cache, so embeddings
+        stay valid dict/lru keys)."""
+        c = np.asarray(self.c_set, np.int32)[:, None, None]
+        d = np.asarray(self.p_set, np.int32)[None, :, None]
+        p = np.asarray(self.p_set, np.int32)[None, None, :]
+        ids = (c * self.host.M + d) * self.host.M + p
+        ids = ids.reshape(-1)  # guest router-id order: c-major, then d, then p
+        ids.setflags(write=False)
+        return ids
+
+    @cached_property
+    def host_to_guest(self) -> np.ndarray:
+        """Inverse map: host router id -> guest router id, or -1 for host
+        devices outside the embedded subnetwork (the idle devices)."""
+        inv = np.full(self.host.num_routers, -1, np.int32)
+        inv[self.device_map] = np.arange(self.guest.num_routers, dtype=np.int32)
+        inv.setflags(write=False)
+        return inv
 
     def map_local_port(self, r: Router, delta: int) -> int:
         """Guest local port delta at guest router r -> host local port."""
@@ -85,14 +118,36 @@ def embed(host: D3, J: int, L: int, c_set=None, p_set=None) -> Embedding:
 
 
 def largest_embeddable(host: D3, dead: set[Router]) -> tuple[int, int, tuple, tuple]:
-    """Greedy survivor-set search: drop any cabinet c that contains a dead
-    router, and any position index appearing in a dead router of surviving
-    cabinets; returns (J, L, c_set, p_set). Conservative but fast — used
-    by elastic failover (a failed chip poisons its (c) and (d,p) indices)."""
+    """Survivor-set search over the two drop regimes of Property 2; returns
+    (J, L, c_set, p_set) with n = J·L² maximal between them.
+
+    A dead router (c, d, p) is excluded from the C × P × P image iff its
+    cabinet leaves C or one of its (d, p) indices leaves P, so two pure
+    regimes always work:
+
+      * *cabinet-drop*: remove every cabinet containing a dead router —
+        survivors D3(K − |bad_c|, M), best for failures clustered in few
+        cabinets;
+      * *position-drop*: remove every position index a dead router poisons
+        (both its d and its p) — survivors D3(K, M − |bad_p|), best for
+        failures striped across many cabinets at few (d, p) indices.
+
+    We price both and keep the larger network (ties to cabinet-drop, which
+    keeps drawers whole). Mixed drops (some cabinets AND some positions)
+    are a set-cover problem left to callers with exotic failure patterns.
+    """
     bad_c = {r[0] for r in dead}
-    c_set = tuple(c for c in range(host.K) if c not in bad_c)
-    bad_p = {r[1] for r in dead if r[0] in c_set} | {r[2] for r in dead if r[0] in c_set}
-    p_set = tuple(p for p in range(host.M) if p not in bad_p)
-    if not c_set or not p_set:
+    bad_p = {r[1] for r in dead} | {r[2] for r in dead}
+    cab_c = tuple(c for c in range(host.K) if c not in bad_c)
+    pos_p = tuple(p for p in range(host.M) if p not in bad_p)
+    candidates: list[tuple[int, int, tuple, tuple]] = []
+    if cab_c:
+        candidates.append((len(cab_c) * host.M * host.M, 0,
+                           cab_c, tuple(range(host.M))))
+    if pos_p:
+        candidates.append((host.K * len(pos_p) * len(pos_p), 1,
+                           tuple(range(host.K)), pos_p))
+    if not candidates:
         raise RuntimeError("no embeddable subnetwork survives")
+    _, _, c_set, p_set = max(candidates, key=lambda t: (t[0], -t[1]))
     return len(c_set), len(p_set), c_set, p_set

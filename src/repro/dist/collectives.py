@@ -13,6 +13,14 @@ All functions run INSIDE shard_map over a 1-D axis of ``program.n``
 devices, device i = router ``layout.topo.id_router(i)``. Pass ``backend``
 to retarget (e.g. ``JaxPpermuteBackend(overlap=True)`` for cross-round
 overlap on pipelined schedules).
+
+Every entry point also takes an optional Property-2 ``embedding``
+(``DeviceLayout.embed_onto``): the lowered guest program is then rewritten
+through ``runtime.rewrite.emulate`` onto the embedding's host, so a
+guest-sized collective runs on the HOST mesh axis (``embedding.host``
+routers) with non-participating devices idle — the §2 matmul and §3
+all-to-all of a D3(J,L) workload on a D3(K,M) pod without re-deriving
+anything. Rewrites are cached alongside the native programs.
 """
 
 from __future__ import annotations
@@ -25,42 +33,72 @@ from repro.core import alltoall as a2a
 from repro.core import broadcast as bc
 from repro.core import hypercube as hc
 from repro.core import matmul as mm
+from repro.core.emulation import Embedding
+from repro.core.topology import D3
 from repro.dist.mesh import DeviceLayout
 from repro.runtime import lowering
 from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
 from repro.runtime.program import CollectiveProgram
+from repro.runtime.rewrite import emulate
 
 _DEFAULT_BACKEND = JaxPpermuteBackend()
 
 
+def _emulated(prog: CollectiveProgram, guest: D3, embedding: Embedding | None):
+    """Rewrite ``prog`` onto the embedding's host (no-op without one).
+    ``emulate`` is itself lru-cached on (program, embedding), so the rewrite
+    cost is paid once per (host, guest, c_set, p_set, program) key."""
+    if embedding is None:
+        return prog
+    if embedding.guest != guest:
+        raise ValueError(
+            f"embedding guest D3({embedding.guest.K},{embedding.guest.M}) "
+            f"does not match the program's D3({guest.K},{guest.M})"
+        )
+    return emulate(prog, embedding)
+
+
 # ----------------------------------------------------------- cached lowering
 @functools.lru_cache(maxsize=None)
-def alltoall_program(layout: DeviceLayout) -> CollectiveProgram:
-    return lowering.lower(a2a.schedule(layout.da_params, layout.topo))
+def alltoall_program(
+    layout: DeviceLayout, embedding: Embedding | None = None
+) -> CollectiveProgram:
+    prog = lowering.lower(a2a.schedule(layout.da_params, layout.topo))
+    return _emulated(prog, layout.topo, embedding)
 
 
 @functools.lru_cache(maxsize=None)
-def allreduce_program(layout: DeviceLayout) -> CollectiveProgram:
+def allreduce_program(
+    layout: DeviceLayout, embedding: Embedding | None = None
+) -> CollectiveProgram:
     sbh = layout.sbh
     if sbh is None:
         raise ValueError(
             f"D3({layout.topo.K},{layout.topo.M}) is not a power-of-two SBH; "
             "no hypercube all-reduce schedule exists"
         )
-    return lowering.lower(hc.allreduce_schedule(sbh))
+    prog = lowering.lower(hc.allreduce_schedule(sbh))
+    return _emulated(prog, layout.topo, embedding)
 
 
 @functools.lru_cache(maxsize=None)
-def broadcast_program(layout: DeviceLayout, root: int) -> CollectiveProgram:
-    return lowering.lower(
+def broadcast_program(
+    layout: DeviceLayout, root: int, embedding: Embedding | None = None
+) -> CollectiveProgram:
+    prog = lowering.lower(
         bc.depth3_schedule(layout.topo, layout.topo.id_router(root))
     )
+    return _emulated(prog, layout.topo, embedding)
 
 
 @functools.lru_cache(maxsize=None)
-def matmul_program(K: int, M: int) -> CollectiveProgram:
-    """§2 program for the K×K array of M×M blocks (K²M² devices)."""
-    return lowering.lower(mm.schedule(mm.MatmulGrid(K, M)))
+def matmul_program(
+    K: int, M: int, embedding: Embedding | None = None
+) -> CollectiveProgram:
+    """§2 program for the K×K array of M×M blocks (K²M² devices); with an
+    embedding, the guest D3(K², M) program rewritten onto its host."""
+    g = mm.MatmulGrid(K, M)
+    return _emulated(lowering.lower(mm.schedule(g)), g.topo, embedding)
 
 
 # ------------------------------------------------------------- collectives
@@ -69,28 +107,36 @@ def xla_all_to_all(x, axis_name: str):
     return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0)
 
 
-def dragonfly_all_to_all(x, axis_name: str, layout: DeviceLayout, backend=None):
+def dragonfly_all_to_all(x, axis_name: str, layout: DeviceLayout, backend=None,
+                         embedding: Embedding | None = None):
     """§3 doubly-parallel all-to-all: K·M²/s rounds of s ppermutes.
 
     ``x``: (n, ...) with x[j] = chunk for device j; returns (n, ...) with
-    out[j] = chunk from device j (the lax.all_to_all 0/0 layout)."""
+    out[j] = chunk from device j (the lax.all_to_all 0/0 layout). With an
+    ``embedding``, ``layout`` is the guest and the exchange runs on the
+    host mesh axis (n = host routers); idle devices pass zeros through."""
     be = backend or _DEFAULT_BACKEND
-    return be.alltoall(x, axis_name, alltoall_program(layout))
+    return be.alltoall(x, axis_name, alltoall_program(layout, embedding))
 
 
-def dragonfly_all_reduce(x, axis_name: str, layout: DeviceLayout, backend=None):
-    """§4 ascend all-reduce (sum) over the emulated hypercube."""
+def dragonfly_all_reduce(x, axis_name: str, layout: DeviceLayout, backend=None,
+                         embedding: Embedding | None = None):
+    """§4 ascend all-reduce (sum) over the emulated hypercube; with an
+    ``embedding``, guest-sized on the host mesh (idle devices unchanged)."""
     be = backend or _DEFAULT_BACKEND
-    return be.allreduce(x, axis_name, allreduce_program(layout))
+    return be.allreduce(x, axis_name, allreduce_program(layout, embedding))
 
 
-def dragonfly_broadcast(x, axis_name: str, layout: DeviceLayout, root: int = 0, backend=None):
-    """§5 depth-3 spanning-tree broadcast from device ``root``."""
+def dragonfly_broadcast(x, axis_name: str, layout: DeviceLayout, root: int = 0,
+                        backend=None, embedding: Embedding | None = None):
+    """§5 depth-3 spanning-tree broadcast from GUEST device ``root`` (the
+    rewrite maps it to its host device when an ``embedding`` is given)."""
     be = backend or _DEFAULT_BACKEND
-    return be.broadcast(x, axis_name, broadcast_program(layout, root))
+    return be.broadcast(x, axis_name, broadcast_program(layout, root, embedding))
 
 
-def dragonfly_matmul(b_block, a_block, axis_name: str, grid: tuple[int, int], backend=None):
+def dragonfly_matmul(b_block, a_block, axis_name: str, grid: tuple[int, int],
+                     backend=None, embedding: Embedding | None = None):
     """§2 block matrix product on the K×K array of M×M blocks, executed by
     the program executor — the paper's rounds on the wire, no gather.
 
@@ -101,6 +147,9 @@ def dragonfly_matmul(b_block, a_block, axis_name: str, grid: tuple[int, int], ba
     strip of B (phases 2.1/2.2), forms the local block products, and
     converges them over the mirrored accumulation paths (ReduceCombine
     matchings + the Z-fix storage hop) — Theorem 1's √n-round structure,
-    visible in the HLO as collective-permutes."""
+    visible in the HLO as collective-permutes. With an ``embedding`` the
+    guest D3(K²,M) product runs on the host mesh axis: active devices hold
+    the guest blocks at their ``active_devices`` slots, idle blocks are
+    ignored and their output stays zero."""
     be = backend or _DEFAULT_BACKEND
-    return be.matmul(b_block, a_block, axis_name, matmul_program(*grid))
+    return be.matmul(b_block, a_block, axis_name, matmul_program(*grid, embedding))

@@ -14,6 +14,7 @@ import dataclasses
 import math
 
 from repro.core.alltoall import DAParams
+from repro.core.emulation import Embedding, embed
 from repro.core.hypercube import SBH
 from repro.core.topology import D3
 
@@ -40,6 +41,17 @@ class DeviceLayout:
         if (1 << k) == self.topo.K and (1 << m) == self.topo.M:
             return SBH(k, m)
         return None
+
+    def embed_onto(self, host: "DeviceLayout | D3", c_set=None, p_set=None) -> Embedding:
+        """Property-2 embedding of THIS layout (as guest) into ``host``.
+
+        The returned ``Embedding`` is what ``dist.collectives`` and
+        ``runtime.rewrite.emulate`` take to run this layout's collectives
+        guest-sized on the host's (larger) mesh axis. Defaults to the
+        canonical prefix subsets; pass ``c_set``/``p_set`` for survivor
+        sets (elastic failover)."""
+        host_topo = host.topo if isinstance(host, DeviceLayout) else host
+        return embed(host_topo, self.topo.K, self.topo.M, c_set=c_set, p_set=p_set)
 
 
 def dragonfly_layout(n: int) -> DeviceLayout:

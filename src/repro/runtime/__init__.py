@@ -22,7 +22,10 @@ on integer-valued floats). Obligations:
 
   * replay communication stages grouped by synchronous step — every stage
     of one ``(round_index, step)`` group reads the PRE-group values; the
-    lowering guarantees distinct write targets within a group;
+    lowering guarantees distinct write targets within each stage, and
+    across the stages of one group only ``ReduceCombine`` destinations may
+    repeat (each arrival folds into the accumulator with a commutative
+    combine, so replay order within a group cannot change results);
   * ``Perm``: full permutation of the per-device value; ``Match``: listed
     destinations replace their value; ``ReduceCombine``: destinations sum
     the arrival into an accumulator, identity pairs meaning a local (no
@@ -33,7 +36,35 @@ on integer-valued floats). Obligations:
     order — bit-identical to barrier order for any program whose schedule
     verified conflict-free under ``verify(pipelined=True)``;
   * use each stage's cached host index arrays (``sigma_np`` etc.) rather
-    than rebuilding them per trace.
+    than rebuilding them per trace;
+  * honor ``program.active_devices`` (emulated guest-on-host programs,
+    below): devices outside it are IDLE — they must not contribute data to
+    any active device's result, and their own slots pass through (inputs
+    unchanged for allreduce/broadcast; outputs zero for alltoall/matmul).
+    Stages of such programs are partial permutations/matchings that never
+    name an idle device, so a conforming backend usually gets this for
+    free; the reference backend additionally ASSERTS idle slots were
+    untouched after every replay.
+
+Emulation rewrite guarantees (``rewrite.emulate(program, embedding)``)
+----------------------------------------------------------------------
+Paper Property 2 as a program-to-program pass: a lowered guest D3(J,L)
+program becomes a host D3(K,M)-sized program with every device id mapped
+through ``Embedding.device_map`` and ``active_devices`` recording the
+guest-ordered host image. The pass guarantees:
+
+  * ``(round_index, step, start_step)`` stamps are preserved, so pipelined
+    replay of the rewrite interleaves exactly like the guest's;
+  * dilation-1: every rewritten pair is one physical host link — the guest
+    schedule's conflict-freedom transfers without re-verification (and can
+    be re-checked via ``rewrite.emulate_schedule`` + ``core.simulator``);
+  * bit-exactness: replaying the rewrite on host arrays carrying the guest
+    data at ``active_devices`` slots (``rewrite.scatter_guest``) yields, at
+    those slots, exactly the guest program's result on any conforming
+    backend;
+  * rewrites are memoized per (program, embedding) — i.e. per (host,
+    guest, c_set, p_set, program) — so repeated failover re-lowers reuse
+    the built host index arrays instead of rebuilding them in jit traces.
 
 ``backends.get_backend("jax_ppermute" | "reference")`` instantiates the
 built-ins: ppermutes on a JAX mesh (optionally overlapped), and a pure-
@@ -41,4 +72,4 @@ NumPy host replay used for differential testing and device-free
 validation.
 """
 
-from repro.runtime import backends, compat, lowering, program  # noqa: F401
+from repro.runtime import backends, compat, lowering, program, rewrite  # noqa: F401

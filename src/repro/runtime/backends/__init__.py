@@ -21,10 +21,17 @@ Built-in backends:
     stages in ``start_step`` order so pipelined rounds interleave on the
     wire (cross-round overlap when the schedule's ``start_step`` permits).
   * ``reference`` — a pure-NumPy host-side replay: no devices, no jax.
-    The ground truth for differential testing and host validation.
+    The ground truth for differential testing and host validation. Also the
+    enforcement point for emulated programs: it asserts idle-device slots
+    stay untouched.
 
-Future backends (NCCL-style send/recv lists, Pallas ring kernels,
-emulation-backed sub-topology replay) plug in as additional modules here.
+Emulated (guest-on-host) programs are NOT a separate backend: the
+``runtime.rewrite.emulate`` pass produces an ordinary ``CollectiveProgram``
+with ``active_devices`` set, and every backend replays it under the
+idle-pass-through rules of the package contract (``runtime/__init__.py``).
+
+Future backends (NCCL-style send/recv lists, Pallas ring kernels) plug in
+as additional modules here.
 """
 
 from __future__ import annotations

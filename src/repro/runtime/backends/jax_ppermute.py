@@ -14,6 +14,15 @@ order: rounds of a pipelined schedule (``meta["start_step"]``) interleave,
 letting XLA overlap independent ppermutes across rounds. For barrier
 schedules the two orders coincide, so overlap is always safe to enable.
 
+Emulated (guest-on-host) programs — ``runtime.rewrite.emulate`` output,
+``program.active_devices`` set — replay on the full K·M·M host mesh with no
+special casing: their stages are partial permutations/matchings over the
+embedded device subset, ``ppermute`` hands idle (non-destination) devices
+zeros, and the replay logic only folds an arrival into a device's state
+when that device is a listed destination, so idle devices pass through.
+A guest J·L·L-device program therefore runs on the host mesh unchanged,
+stamps and pipelining included.
+
 The ``run_*`` wrappers build the shard_map plumbing for whole-array callers
 (the backend contract shared with the NumPy reference backend) and are the
 executable form of the paper: MoE token dispatch calls the per-shard
@@ -37,12 +46,8 @@ from repro.runtime.program import (
     Match,
     Perm,
     ReduceCombine,
+    check_kind as _check_kind,
 )
-
-
-def _check_kind(program: CollectiveProgram, kind: str) -> None:
-    if program.kind != kind:
-        raise ValueError(f"program is {program.kind!r}, expected {kind!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,23 +233,26 @@ class JaxPpermuteBackend:
         self, B, A, program: CollectiveProgram, axis_name: str = "df", mesh: Mesh | None = None
     ):
         """B, A: (N·X, N·X) matrices -> B @ A via the §2 rounds on a mesh of
-        K²M² devices in router order."""
+        ``program.n`` devices in router order. Emulated programs scatter the
+        guest's blocks to their ``active_devices`` slots of the host mesh
+        (grid metadata is the GUEST grid) and gather them back."""
         from repro.core.matmul import MatmulGrid, gather_blocks, scatter_blocks
+        from repro.runtime.rewrite import gather_guest, scatter_guest
 
         _check_kind(program, "matmul")
         if program.grid is None:
             raise ValueError("matmul program lacks grid metadata")
         g = MatmulGrid(*program.grid)
         mesh = mesh or _axis_mesh(program.n, axis_name)
-        b = jnp.asarray(scatter_blocks(g, np.asarray(B)))
-        a = jnp.asarray(scatter_blocks(g, np.asarray(A)))
+        b = jnp.asarray(scatter_guest(scatter_blocks(g, np.asarray(B)), program))
+        a = jnp.asarray(scatter_guest(scatter_blocks(g, np.asarray(A)), program))
         f = compat.shard_map(
             lambda bb, aa: self.matmul(bb[0], aa[0], axis_name, program)[None],
             mesh=mesh, in_specs=(P(axis_name), P(axis_name)),
             out_specs=P(axis_name),
         )
         c = jax.jit(f)(b, a)
-        return gather_blocks(g, np.asarray(c))
+        return gather_blocks(g, gather_guest(np.asarray(c), program))
 
 
 def _axis_mesh(n: int, axis_name: str) -> Mesh:

@@ -8,6 +8,13 @@ is the device (= router id) axis.
 Semantics mirror ``runtime.program``'s synchronous-step contract: all
 stages of one step group read the pre-group values, then their writes land
 together.
+
+Emulated (guest-on-host) programs — ``program.active_devices`` set — are
+replayed on host-sized arrays. This backend is the enforcement point of the
+idle-isolation guarantee: after replay it ASSERTS that slots belonging to
+idle host devices were never touched (inputs pass through for allreduce/
+broadcast; outputs stay zero for alltoall/matmul). A violated assertion
+means the rewrite or a backend broke the contract, not user error.
 """
 
 from __future__ import annotations
@@ -20,12 +27,25 @@ from repro.runtime.program import (
     Match,
     Perm,
     ReduceCombine,
+    check_kind as _check_kind,
 )
 
 
-def _check_kind(program: CollectiveProgram, kind: str) -> None:
-    if program.kind != kind:
-        raise ValueError(f"program is {program.kind!r}, expected {kind!r}")
+def _assert_idle_untouched(program: CollectiveProgram, got: np.ndarray,
+                           want: np.ndarray, axes=(0,)) -> None:
+    """Emulated programs: idle host devices' slots must be bit-identical to
+    ``want`` (the pre-replay values, or zeros for freshly-built outputs)."""
+    if program.active_devices is None:
+        return
+    idle = ~program.active_mask_np
+    for ax in axes:
+        sel = [slice(None)] * got.ndim
+        sel[ax] = idle
+        if not np.array_equal(got[tuple(sel)], want[tuple(sel)]):
+            raise AssertionError(
+                f"idle device slots were touched on axis {ax} of a "
+                f"{program.kind!r} emulation replay ({program.name})"
+            )
 
 
 class NumpyReferenceBackend:
@@ -36,25 +56,30 @@ class NumpyReferenceBackend:
     # ------------------------------------------------------------ alltoall
     def run_alltoall(self, x: np.ndarray, program: CollectiveProgram) -> np.ndarray:
         """x: (n, n, ...) with x[i, j] the chunk device i sends to device j;
-        returns out[i, j] = chunk received by i FROM j (= x[j, i])."""
+        returns out[i, j] = chunk received by i FROM j (= x[j, i]).
+
+        Emulated programs: only active (i, j) slots are filled; rows and
+        columns of idle devices stay zero (asserted)."""
         _check_kind(program, "alltoall")
         n = program.n
         if x.shape[0] != n or x.shape[1] != n:
             raise ValueError(f"expected leading dims ({n}, {n}), got {x.shape}")
         out = np.zeros_like(x)
-        ar = np.arange(n)
         for op in program.comm_stages:
             assert isinstance(op, Perm)
-            # device i sends chunk x[i, sigma[i]]; receiver sigma[i] files it
-            # under its sender's index i.
-            out[op.sigma_np, ar] = x[ar, op.sigma_np]
+            # sender s ships chunk x[s, d] to d, who files it under index s —
+            # pairs-based so partial (emulated) perms never touch idle slots.
+            out[op.dst_np, op.src_np] = x[op.src_np, op.dst_np]
+        _assert_idle_untouched(program, out, np.zeros_like(out), axes=(0, 1))
         return out
 
     # ----------------------------------------------------------- allreduce
     def run_allreduce(self, x: np.ndarray, program: CollectiveProgram) -> np.ndarray:
-        """x: (n, ...) -> (n, ...) with every row the sum over rows."""
+        """x: (n, ...) -> (n, ...) with every active row the sum over active
+        rows; idle rows pass through unchanged (asserted)."""
         _check_kind(program, "allreduce")
-        val = np.asarray(x).copy()
+        x = np.asarray(x)
+        val = x.copy()
         for st in program.comm_stages:
             assert isinstance(st, ReduceCombine)
             recv = np.zeros_like(val)
@@ -62,6 +87,7 @@ class NumpyReferenceBackend:
                 recv[d] = val[s]
             recv[st.self_mask_np] += val[st.self_mask_np]
             val = val + recv
+        _assert_idle_untouched(program, val, x)
         return val
 
     # ----------------------------------------------------------- broadcast
@@ -75,7 +101,8 @@ class NumpyReferenceBackend:
         conflict-freedom, projected onto data)."""
         _check_kind(program, "broadcast")
         waves = program.num_rounds > 1
-        val = np.asarray(x).copy()
+        x = np.asarray(x)
+        val = x.copy()
         if waves and val.shape[0] != program.num_rounds:
             raise ValueError(
                 f"expected leading wave dim {program.num_rounds}, got {val.shape}"
@@ -90,6 +117,7 @@ class NumpyReferenceBackend:
                     val[st.round_index][dst] = pre[st.round_index][src]
                 else:
                     val[dst] = pre[src]
+        _assert_idle_untouched(program, val, x, axes=(1,) if waves else (0,))
         return val
 
     # -------------------------------------------------------------- matmul
@@ -97,17 +125,20 @@ class NumpyReferenceBackend:
         self, B: np.ndarray, A: np.ndarray, program: CollectiveProgram
     ) -> np.ndarray:
         """§2 block product via program replay: B, A are (N·X, N·X)
-        matrices; returns B @ A computed by the paper's rounds."""
+        matrices; returns B @ A computed by the paper's rounds. Emulated
+        programs scatter the guest's blocks to their host devices (grid
+        metadata is the GUEST grid), replay host-sized, and gather back."""
         from repro.core.matmul import MatmulGrid, gather_blocks, scatter_blocks
+        from repro.runtime.rewrite import gather_guest, scatter_guest
 
         _check_kind(program, "matmul")
         if program.grid is None:
             raise ValueError("matmul program lacks grid metadata")
         g = MatmulGrid(*program.grid)
-        b = scatter_blocks(g, np.asarray(B))
-        a = scatter_blocks(g, np.asarray(A))
+        b = scatter_guest(scatter_blocks(g, np.asarray(B)), program)
+        a = scatter_guest(scatter_blocks(g, np.asarray(A)), program)
         c = self.matmul_blocks(b, a, program)
-        return gather_blocks(g, c)
+        return gather_blocks(g, gather_guest(c, program))
 
     def matmul_blocks(
         self, b: np.ndarray, a: np.ndarray, program: CollectiveProgram
@@ -150,4 +181,5 @@ class NumpyReferenceBackend:
                         acc[d] = acc[d] + pre[s]
                 else:  # pragma: no cover - lowering never emits Perm here
                     raise TypeError(f"unexpected stage {st!r} in matmul program")
+        _assert_idle_untouched(program, c, np.zeros_like(c))
         return c

@@ -26,9 +26,17 @@ Stage primitives
 Synchronous-step semantics: stages sharing one ``(round_index, step)`` group
 read the *pre-step* values and their writes land together — the paper's
 model where all of a hop-step's packets are in flight simultaneously. The
-lowering guarantees write targets are distinct within a group (it is the
+lowering guarantees write targets are distinct within each stage (the
 link-conflict-freedom ``core.simulator.verify`` proved, projected onto
-devices), so group replay order cannot change results.
+devices); across the stages of one group only ``ReduceCombine``
+destinations may repeat, and their commutative combine is why group replay
+order still cannot change results.
+
+Programs are host-retargetable: ``runtime.rewrite.emulate`` relabels a
+guest D3(J,L) program through a Property-2 embedding into a D3(K,M)-sized
+program whose ``active_devices`` names the participating host devices (in
+guest order); every other device is idle and passes through. Backends honor
+the mask per the contract in ``runtime/__init__.py``.
 
 Everything here is pure Python over hashable data — programs can be cached
 per (topology, schedule) key and shared across jit traces. Per-stage NumPy
@@ -54,29 +62,52 @@ LOCAL_FNS = ("load_b", "mul_a", "promote", "store_c")
 
 @dataclasses.dataclass(frozen=True)
 class Perm:
-    """Full permutation over device ids: device i sends to ``sigma[i]``."""
+    """Permutation over device ids: device i sends to ``sigma[i]``.
+
+    ``n`` (default 0 = ``len(pairs)``) is the device count the permutation
+    acts over. With ``n > len(pairs)`` the stage is a *partial* permutation
+    — a bijection on the subset of devices named in ``pairs`` with every
+    other device an implicit fixed point that neither sends nor receives.
+    The emulation rewrite (``runtime.rewrite``) produces these: a guest
+    program's full permutations become host-sized partial permutations over
+    the embedded device subset.
+    """
 
     pairs: Pairs
     round_index: int = 0
     step: int = 0
     start_step: int = 0
+    n: int = 0
 
     def __post_init__(self) -> None:
         srcs = {s for s, _ in self.pairs}
         dsts = {d for _, d in self.pairs}
         if len(srcs) != len(self.pairs) or dsts != srcs:
             raise ValueError("Perm pairs must form a permutation")
+        if self.n and srcs and (min(srcs) < 0 or max(srcs) >= self.n):
+            raise ValueError(f"Perm pairs exceed n={self.n}")
+        if not self.n and srcs != set(range(len(self.pairs))):
+            raise ValueError("full Perm must cover device ids 0..len(pairs)-1")
+
+    @cached_property
+    def size(self) -> int:
+        """Device count the permutation acts over (= program n)."""
+        return self.n or len(self.pairs)
+
+    @cached_property
+    def is_partial(self) -> bool:
+        return len(self.pairs) < self.size
 
     @cached_property
     def sigma(self) -> tuple[int, ...]:
-        out = [0] * len(self.pairs)
+        out = list(range(self.size))  # implicit fixed points stay in place
         for s, d in self.pairs:
             out[s] = d
         return tuple(out)
 
     @cached_property
     def inverse(self) -> tuple[int, ...]:
-        out = [0] * len(self.pairs)
+        out = list(range(self.size))
         for s, d in self.pairs:
             out[d] = s
         return tuple(out)
@@ -88,6 +119,15 @@ class Perm:
     @cached_property
     def inverse_np(self) -> np.ndarray:
         return np.asarray(self.inverse, np.int32)
+
+    @cached_property
+    def src_np(self) -> np.ndarray:
+        """Explicit senders only (the pairs), for partial-perm replay."""
+        return np.asarray([s for s, _ in self.pairs], np.int32)
+
+    @cached_property
+    def dst_np(self) -> np.ndarray:
+        return np.asarray([d for _, d in self.pairs], np.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +245,12 @@ Stage = Perm | Match | ReduceCombine | LocalContract
 COMM_STAGES = (Perm, Match, ReduceCombine)
 
 
+def check_kind(program: "CollectiveProgram", kind: str) -> None:
+    """Backend guard: the program must be of the expected ``kind``."""
+    if program.kind != kind:
+        raise ValueError(f"program is {program.kind!r}, expected {kind!r}")
+
+
 @dataclasses.dataclass(frozen=True)
 class CollectiveProgram:
     """One backend-retargetable lowered schedule.
@@ -222,10 +268,43 @@ class CollectiveProgram:
     root: int | None = None  # broadcast programs: root device id
     grid: tuple[int, int] | None = None  # matmul programs: (K, M) of the grid
     name: str = ""
+    #: Emulated (guest-on-host) programs: the host device ids that
+    #: participate, in GUEST id order — ``active_devices[g]`` is the host
+    #: device emulating guest device g (``Embedding.device_map``). ``None``
+    #: means every device participates (native programs). Devices outside
+    #: the tuple are idle: backends must pass them through untouched, and
+    #: the reference backend asserts they stay untouched.
+    active_devices: tuple[int, ...] | None = None
 
     def __post_init__(self) -> None:
         if self.kind not in KINDS:
             raise ValueError(f"unknown program kind {self.kind!r}")
+        if self.active_devices is not None:
+            ids = self.active_devices
+            if len(set(ids)) != len(ids) or len(ids) > self.n:
+                raise ValueError("active_devices must be distinct device ids")
+            if ids and (min(ids) < 0 or max(ids) >= self.n):
+                raise ValueError(f"active_devices exceed n={self.n}")
+
+    @property
+    def guest_n(self) -> int:
+        """Logical (guest) device count: ``n`` for native programs, the
+        embedded subnetwork size for rewritten ones."""
+        return self.n if self.active_devices is None else len(self.active_devices)
+
+    @cached_property
+    def active_np(self) -> np.ndarray:
+        """Guest-ordered host ids (identity for native programs)."""
+        if self.active_devices is None:
+            return np.arange(self.n, dtype=np.int32)
+        return np.asarray(self.active_devices, np.int32)
+
+    @cached_property
+    def active_mask_np(self) -> np.ndarray:
+        """Boolean mask over the n devices: True = participates."""
+        mask = np.zeros(self.n, bool)
+        mask[self.active_np] = True
+        return mask
 
     # ------------------------------------------------------------ structure
     @property

@@ -1,8 +1,15 @@
 """Fault tolerance & elasticity.
 
 * Failure handling: on detected chip/host loss, remap to the largest
-  embeddable D3(J, L) subnetwork (paper Property 2 — core/emulation.py),
-  rebuild the mesh and re-shard from the latest checkpoint.
+  embeddable D3(J, L) subnetwork (paper Property 2 — core/emulation.py)
+  and REWRITE the already-lowered guest programs onto the survivors
+  (``runtime.rewrite.emulate``). Recovery never calls back into the
+  ``core.{matmul,alltoall,broadcast,hypercube}`` derivations: schedules
+  are derived + lowered ONCE, ahead of failures, into a per-shape program
+  library (``prepare_fallbacks``), and ``plan_recovery`` is a pure lookup
+  + relabel — cheap enough to run inside the failover window, and cached
+  (``emulate`` memoizes per (program, embedding)) so repeated failovers
+  onto the same survivor set are free.
 * Straggler mitigation: deadline-based microbatch accounting — rounds are
   deterministic (the paper's conflict-free schedules have no stochastic
   congestion), so a late participant is detected by round index; the
@@ -12,31 +19,145 @@
 from __future__ import annotations
 
 import dataclasses
-import time
 
-from repro.core.topology import D3, Router
-from repro.core.emulation import largest_embeddable, embed
+from repro.core.emulation import Embedding, embed, largest_embeddable
+from repro.core.schedule import Schedule
+from repro.core.topology import D3
 from repro.dist.mesh import DeviceLayout
+from repro.runtime.program import CollectiveProgram
+from repro.runtime.rewrite import emulate, emulate_schedule
+
+
+class UnpreparedShapeError(LookupError):
+    """plan_recovery needed a guest shape the library doesn't hold.
+
+    Recovery is rewrite-only by design — it will not fall back to deriving
+    schedules. Call ``ClusterState.prepare_fallbacks()`` (or
+    ``prepare_shape(J, L)``) ahead of failures.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredSuite:
+    """The derive-once artifacts for one guest shape: the Schedule IRs (for
+    host-graph verification via ``emulate_schedule``) and their lowered
+    ``CollectiveProgram``s (for execution via ``emulate``)."""
+
+    schedules: dict[str, Schedule]
+    programs: dict[str, CollectiveProgram]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPlan:
+    """Everything failover needs, produced WITHOUT re-deriving schedules.
+
+    ``programs`` are host-sized rewrites of the guest suite (replayable on
+    the surviving mesh as-is, ``active_devices`` = survivor ids in guest
+    order); ``schedules`` are the matching host-graph Schedule views for
+    ``core.simulator.verify``; ``index_map`` maps guest device id → host
+    device id (= ``embedding.device_map``).
+    """
+
+    layout: DeviceLayout           # the guest D3(J, L) view
+    embedding: Embedding
+    index_map: dict[int, int]
+    programs: dict[str, CollectiveProgram]
+    schedules: dict[str, Schedule]
+
+
+def lower_layout_programs(layout: DeviceLayout, *, root: int = 0) -> LoweredSuite:
+    """Derive + lower the paper's algorithm suite for one layout.
+
+    This is the ONLY recovery-adjacent function that calls into the core
+    algorithm modules — it runs at preparation time (cluster bring-up),
+    never inside ``plan_recovery``. Kinds a shape cannot support are
+    skipped: no SBH all-reduce off powers of two, no §2 grid when K is not
+    a perfect square, and degenerate shapes (single drawer/cabinet) skip
+    whichever derivations reject them.
+    """
+    from repro.core import alltoall as a2a
+    from repro.core import broadcast as bc
+    from repro.core import hypercube as hc
+    from repro.core import matmul as mm
+    from repro.runtime import lowering
+
+    topo = layout.topo
+    schedules: dict[str, Schedule] = {}
+    try:
+        schedules["alltoall"] = a2a.schedule(layout.da_params, topo)
+    except (ValueError, AssertionError):
+        pass
+    if layout.sbh is not None:
+        schedules["allreduce"] = hc.allreduce_schedule(layout.sbh)
+    try:
+        schedules["broadcast"] = bc.depth3_schedule(topo, topo.id_router(root))
+    except (ValueError, AssertionError):
+        pass
+    k = int(round(topo.K ** 0.5))
+    if k * k == topo.K:
+        schedules["matmul"] = mm.schedule(mm.MatmulGrid(k, topo.M))
+    programs = {kind: lowering.lower(s) for kind, s in schedules.items()}
+    return LoweredSuite(schedules=schedules, programs=programs)
 
 
 @dataclasses.dataclass
 class ClusterState:
     layout: DeviceLayout
     dead: set = dataclasses.field(default_factory=set)
+    #: guest shape (J, L) -> derive-once suite; filled by prepare_*.
+    library: dict = dataclasses.field(default_factory=dict)
 
     def fail(self, device_index: int):
         self.dead.add(self.layout.topo.id_router(device_index))
 
-    def plan_recovery(self):
-        """-> (new_layout, device_index_map old->new) after failures."""
+    # ----------------------------------------------------- preparation time
+    def prepare_shape(self, J: int, L: int, *, root: int = 0) -> LoweredSuite:
+        """Derive + lower the suite for guest D3(J, L) (idempotent)."""
+        key = (J, L)
+        if key not in self.library:
+            self.library[key] = lower_layout_programs(DeviceLayout(D3(J, L)), root=root)
+        return self.library[key]
+
+    def fallback_shapes(self) -> list[tuple[int, int]]:
+        """Every shape ``largest_embeddable`` can return on this pod: the
+        cabinet-drop ladder (j, M) and the position-drop ladder (K, l),
+        including the healthy (K, M) itself."""
+        K, M = self.layout.topo.K, self.layout.topo.M
+        shapes = [(j, M) for j in range(K, 0, -1)]
+        shapes += [(K, l) for l in range(M - 1, 0, -1)]
+        return shapes
+
+    def prepare_fallbacks(self, shapes=None, *, root: int = 0) -> None:
+        """Populate the program library ahead of failures — the derive/lower
+        cost is paid here, once, so the failover window never pays it."""
+        for J, L in (shapes if shapes is not None else self.fallback_shapes()):
+            self.prepare_shape(J, L, root=root)
+
+    # --------------------------------------------------------- failure time
+    def plan_recovery(self) -> RecoveryPlan:
+        """Rewrite-only failover: largest embeddable survivor network, then
+        relabel the prepared guest suite through the embedding. Zero calls
+        into core schedule derivations and zero re-lowering — raises
+        ``UnpreparedShapeError`` if the shape was never prepared."""
         J, L, c_set, p_set = largest_embeddable(self.layout.topo, self.dead)
         emb = embed(self.layout.topo, J, L, c_set=c_set, p_set=p_set)
-        new_layout = DeviceLayout(emb.guest)
-        index_map = {
-            emb.guest.router_id(r): self.layout.topo.router_id(emb.map_router(r))
-            for r in emb.guest.routers()
-        }
-        return new_layout, index_map
+        suite = self.library.get((J, L))
+        if suite is None:
+            raise UnpreparedShapeError(
+                f"no prepared programs for guest D3({J},{L}); call "
+                f"prepare_fallbacks() (or prepare_shape({J}, {L})) before "
+                "failures — recovery does not re-derive schedules"
+            )
+        programs = {kind: emulate(prog, emb) for kind, prog in suite.programs.items()}
+        schedules = {kind: emulate_schedule(s, emb) for kind, s in suite.schedules.items()}
+        index_map = {g: int(h) for g, h in enumerate(emb.device_map)}
+        return RecoveryPlan(
+            layout=DeviceLayout(emb.guest),
+            embedding=emb,
+            index_map=index_map,
+            programs=programs,
+            schedules=schedules,
+        )
 
 
 @dataclasses.dataclass

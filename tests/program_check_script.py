@@ -10,7 +10,11 @@ The acceptance bar:
     bit-exact vs ``jnp.einsum`` on a CPU device mesh, and its HLO contains
     collective-permutes but NO all-gather;
   * pipelined (start_step-ordered) execution of the §5 wave schedule on
-    devices is bit-identical to barrier replay.
+    devices is bit-identical to barrier replay;
+  * guest D3(2,2) programs rewritten onto a D3(2,4) host
+    (``runtime.rewrite.emulate``) replay on the 32-device mesh
+    bit-identically to the natively-lowered guest, idle devices passing
+    through.
 
 (n = K²M² routers means no §2 grid has exactly 8 devices — the smallest
 non-degenerate grid (2,2) is the 16-device mesh checked here; grid (2,1)
@@ -30,11 +34,13 @@ from repro.core import alltoall as a2a
 from repro.core import broadcast as bc
 from repro.core import hypercube as hc
 from repro.core import matmul as mm
+from repro.core.emulation import embed
 from repro.core.topology import D3
 from repro.dist.mesh import DeviceLayout
 from repro.runtime import compat, lowering
 from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
 from repro.runtime.backends.reference import NumpyReferenceBackend
+from repro.runtime.rewrite import emulate, gather_guest, scatter_guest
 
 JAXBE = JaxPpermuteBackend()
 REF = NumpyReferenceBackend()
@@ -132,10 +138,66 @@ def check_pipelined_broadcast_on_device():
           f"{sum(6 for _ in range(prog.num_rounds))})")
 
 
+def check_emulation_rewrite():
+    """Guest D3(2,2) programs rewritten onto a D3(2,4) host (32 devices,
+    non-contiguous survivor subset) replay on the JAX mesh bit-identically
+    to the natively-lowered guest on the reference backend — idle host
+    devices pass through. The §2 matmul runs guest grid (1,2) = D3(1,2)
+    on the same 32-device host."""
+    host = D3(2, 4)
+    guest = DeviceLayout(D3(2, 2))
+    emb = embed(host, 2, 2, p_set=(1, 3))
+    mesh = mesh_of(host.num_routers)
+    rng = np.random.default_rng(3)
+    ng = guest.n
+
+    prog = lowering.lower(a2a.schedule(guest.da_params, guest.topo))
+    hprog = emulate(prog, emb)
+    x = rng.standard_normal((ng, ng, 3)).astype(np.float32)
+    xh = scatter_guest(x, hprog, axes=(0, 1))
+    got = np.asarray(JAXBE.run_alltoall(xh, hprog, mesh=mesh))
+    np.testing.assert_array_equal(got, REF.run_alltoall(xh, hprog))
+    np.testing.assert_array_equal(
+        gather_guest(got, hprog, axes=(0, 1)), REF.run_alltoall(x, prog)
+    )
+    idle = ~hprog.active_mask_np
+    assert not got[idle].any() and not got[:, idle].any()
+
+    prog = lowering.lower(hc.allreduce_schedule(guest.sbh))
+    hprog = emulate(prog, emb)
+    xr = rng.standard_normal((ng, 4)).astype(np.float32)
+    xrh = scatter_guest(xr, hprog, fill=7.0)  # idle slots must pass through
+    got = np.asarray(JAXBE.run_allreduce(xrh, hprog, mesh=mesh))
+    np.testing.assert_array_equal(got, REF.run_allreduce(xrh, hprog))
+    np.testing.assert_array_equal(gather_guest(got, hprog), REF.run_allreduce(xr, prog))
+    np.testing.assert_array_equal(got[~hprog.active_mask_np], 7.0)
+
+    prog = lowering.lower(bc.depth3_schedule(guest.topo, (0, 1, 0)))
+    hprog = emulate(prog, emb)
+    xbh = scatter_guest(xr, hprog, fill=-2.0)
+    got = np.asarray(JAXBE.run_broadcast(xbh, hprog, mesh=mesh))
+    np.testing.assert_array_equal(got, REF.run_broadcast(xbh, hprog))
+    np.testing.assert_array_equal(gather_guest(got, hprog), REF.run_broadcast(xr, prog))
+
+    g = mm.MatmulGrid(1, 2)
+    prog = lowering.lower(mm.schedule(g))
+    hprog = emulate(prog, embed(host, g.topo.K, g.topo.M, p_set=(0, 2)))
+    X = 2
+    N = g.n * X
+    B = rng.integers(-4, 5, (N, N)).astype(np.float32)
+    A = rng.integers(-4, 5, (N, N)).astype(np.float32)
+    got = JAXBE.run_matmul(B, A, hprog, mesh=mesh)
+    np.testing.assert_array_equal(got, B @ A)
+    np.testing.assert_array_equal(got, REF.run_matmul(B, A, hprog))
+    print(f"emulation rewrite OK (guest D3(2,2) on D3(2,4) host, "
+          f"{host.num_routers}-device mesh, idle pass-through)")
+
+
 if __name__ == "__main__":
     assert jax.device_count() >= 32, jax.device_count()
     check_differential(4, 2)
     check_differential(2, 4)
+    check_emulation_rewrite()
     # §2 grids: D3(4,2) is grid (2,2); no grid has K²M² = 2·16 (K must be a
     # perfect square), so (1,4) is the second matmul case.
     check_matmul_differential(2, 2, X=2)

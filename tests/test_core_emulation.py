@@ -1,5 +1,6 @@
 """Property 2 — D3(J,L) ⊂ D3(K,M) dilation-1 emulation + elastic failover."""
 
+import numpy as np
 import pytest
 try:  # hypothesis is optional — deterministic fallback sampler otherwise
     from hypothesis import given, settings, strategies as st
@@ -57,3 +58,82 @@ def test_failover_multiple_failures():
     emb = embed(host, J, L, c_set=c_set, p_set=p_set)
     for r in emb.guest.routers():
         assert emb.map_router(r) not in dead
+
+
+# ------------------------------------------------ the two drop regimes
+def test_largest_embeddable_cabinet_drop_regime():
+    """Clustered failures: dropping the one poisoned cabinet beats
+    dropping the poisoned positions (3·16 = 48 > 4·4 = 16)."""
+    host = D3(4, 4)
+    dead = {(1, 0, 1), (1, 2, 3)}
+    J, L, c_set, p_set = largest_embeddable(host, dead)
+    assert (J, L) == (3, 4)
+    assert c_set == (0, 2, 3) and p_set == (0, 1, 2, 3)
+
+
+def test_largest_embeddable_position_drop_regime():
+    """Regression for the always-empty ``bad_p`` bug: failures striped at
+    one (d, p) slot across EVERY cabinet used to leave no survivors at
+    all; the position-drop regime keeps D3(K, M-1). Here it also beats
+    cabinet-drop when only most cabinets are hit (4·9 = 36 > 1·16)."""
+    host = D3(4, 4)
+    striped = {(c, 0, 0) for c in range(4)}
+    J, L, c_set, p_set = largest_embeddable(host, striped)
+    assert (J, L) == (4, 3)
+    assert c_set == (0, 1, 2, 3) and p_set == (1, 2, 3)
+    emb = embed(host, J, L, c_set=c_set, p_set=p_set)
+    assert not {emb.map_router(r) for r in emb.guest.routers()} & striped
+
+    partial_stripe = {(0, 0, 0), (1, 0, 0), (2, 0, 0)}
+    J, L, c_set, p_set = largest_embeddable(host, partial_stripe)
+    assert (J, L) == (4, 3)  # 36 chips > cabinet-drop's 1·16
+
+
+def test_largest_embeddable_regime_tie_prefers_cabinets():
+    # D3(2,2), one dead chip: cabinet-drop 1·4 == position-drop 2·1... no:
+    # (0,0,1) poisons positions {0,1} entirely -> only cabinet-drop lives.
+    J, L, c_set, p_set = largest_embeddable(D3(2, 2), {(0, 0, 1)})
+    assert (J, L) == (1, 2) and c_set == (1,)
+    with pytest.raises(RuntimeError, match="survives"):
+        largest_embeddable(D3(1, 2), {(0, 0, 1)})
+
+
+def test_largest_embeddable_dead_position_pair_excluded():
+    """Every dead router must be excluded from the survivor image under
+    BOTH regimes (its cabinet leaves C, or its d AND p leave P)."""
+    host = D3(3, 5)
+    dead = {(0, 1, 2), (2, 4, 4)}
+    J, L, c_set, p_set = largest_embeddable(host, dead)
+    emb = embed(host, J, L, c_set=c_set, p_set=p_set)
+    assert not {emb.map_router(r) for r in emb.guest.routers()} & dead
+
+
+# ------------------------------------------------ vectorized device maps
+def test_device_map_matches_map_router():
+    host = D3(5, 6)
+    emb = embed(host, 3, 4, c_set=(0, 2, 4), p_set=(1, 2, 4, 5))
+    dm = emb.device_map
+    assert dm.dtype == np.int32 and len(dm) == emb.guest.num_routers
+    for r in emb.guest.routers():
+        assert dm[emb.guest.router_id(r)] == host.router_id(emb.map_router(r))
+    # inverse: host -> guest, -1 off the image
+    inv = emb.host_to_guest
+    assert (inv[dm] == np.arange(len(dm))).all()
+    assert (inv == -1).sum() == host.num_routers - emb.guest.num_routers
+
+
+def test_device_map_is_cached_and_readonly():
+    emb = embed(D3(4, 4), 2, 2)
+    assert emb.device_map is emb.device_map
+    assert emb.host_to_guest is emb.host_to_guest
+    with pytest.raises(ValueError):
+        emb.device_map[0] = 7
+    # the cache must not break hashing/eq of the frozen dataclass
+    assert emb == embed(D3(4, 4), 2, 2) and hash(emb) == hash(embed(D3(4, 4), 2, 2))
+
+
+def test_embedding_rejects_out_of_range_subsets():
+    with pytest.raises(ValueError, match="out of range"):
+        embed(D3(4, 4), 2, 2, c_set=(0, 5))
+    with pytest.raises(ValueError, match="out of range"):
+        embed(D3(4, 4), 2, 2, p_set=(0, 4))

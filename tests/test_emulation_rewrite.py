@@ -1,0 +1,288 @@
+"""Emulation rewrite layer: guest D3(J,L) programs lowered onto their
+D3(K,M) host (``runtime.rewrite``) and the rewrite-only failover path
+(``train.fault_tolerance``).
+
+Host-side (reference backend) coverage; the forced-32-device JAX-mesh
+differential lives in ``program_check_script.py`` (spawned by
+``test_runtime_program.py::test_program_backends_32dev``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import alltoall as a2a
+from repro.core import broadcast as bc
+from repro.core import hypercube as hc
+from repro.core import matmul as mm
+from repro.core.emulation import embed
+from repro.core.simulator import verify
+from repro.core.topology import D3
+from repro.dist.mesh import DeviceLayout
+from repro.runtime import lowering
+from repro.runtime.backends.reference import NumpyReferenceBackend
+from repro.runtime.program import LocalContract, Match, Perm, ReduceCombine
+from repro.runtime.rewrite import (
+    emulate,
+    emulate_schedule,
+    gather_guest,
+    scatter_guest,
+)
+from repro.train.fault_tolerance import ClusterState, UnpreparedShapeError
+
+REF = NumpyReferenceBackend()
+HOST = D3(4, 4)
+GUEST = DeviceLayout(D3(2, 2))
+
+#: a deliberately non-contiguous survivor set — the regime failover produces
+EMB = embed(HOST, 2, 2, c_set=(1, 3), p_set=(0, 2))
+
+
+def _guest_programs():
+    return {
+        "alltoall": lowering.lower(a2a.schedule(GUEST.da_params, GUEST.topo)),
+        "allreduce": lowering.lower(hc.allreduce_schedule(GUEST.sbh)),
+        "broadcast": lowering.lower(bc.depth3_schedule(GUEST.topo, (0, 1, 0))),
+    }
+
+
+# ------------------------------------------------------------ structure
+def test_rewrite_preserves_stamps_and_kind():
+    for kind, prog in _guest_programs().items():
+        host_prog = emulate(prog, EMB)
+        assert host_prog.kind == kind == prog.kind
+        assert host_prog.n == HOST.num_routers
+        assert host_prog.guest_n == prog.n == GUEST.n
+        assert host_prog.num_rounds == prog.num_rounds
+        assert host_prog.active_devices == tuple(EMB.device_map)
+        assert len(host_prog.stages) == len(prog.stages)
+        for g, h in zip(prog.stages, host_prog.stages):
+            assert type(g) is type(h)
+            assert (g.round_index, g.step, g.start_step) == \
+                (h.round_index, h.step, h.start_step)
+
+
+def test_rewrite_maps_every_pair_through_device_map():
+    dm = EMB.device_map
+    prog = _guest_programs()["alltoall"]
+    host_prog = emulate(prog, EMB)
+    for g, h in zip(prog.comm_stages, host_prog.comm_stages):
+        assert isinstance(h, Perm) and h.is_partial and h.size == HOST.num_routers
+        assert h.pairs == tuple((int(dm[s]), int(dm[d])) for s, d in g.pairs)
+    root_prog = _guest_programs()["broadcast"]
+    assert emulate(root_prog, EMB).root == int(dm[root_prog.root])
+
+
+def test_rewrite_is_cached_per_program_and_embedding():
+    """Satellite: repeated failover re-lowers hit the lru cache, so host
+    index arrays are shared rather than rebuilt inside jit traces."""
+    prog = _guest_programs()["alltoall"]
+    first = emulate(prog, EMB)
+    assert emulate(prog, EMB) is first
+    assert first.stages[0].sigma_np is first.stages[0].sigma_np
+    other = embed(HOST, 2, 2)  # different survivor set -> different entry
+    assert emulate(prog, other) is not first
+    assert emulate(prog, other) is emulate(prog, other)
+
+
+def test_rewrite_rejects_mismatched_guest_and_double_rewrite():
+    prog = _guest_programs()["alltoall"]
+    with pytest.raises(ValueError, match="guest"):
+        emulate(prog, embed(HOST, 2, 3))
+    host_prog = emulate(prog, EMB)
+    with pytest.raises(ValueError, match="already an emulation rewrite"):
+        emulate(host_prog, embed(D3(4, 8), 4, 4))
+
+
+# ----------------------------------------------- differential: 4 kinds
+def test_alltoall_rewrite_bit_exact_vs_native_guest():
+    prog = _guest_programs()["alltoall"]
+    host_prog = emulate(prog, EMB)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((prog.n, prog.n, 3))
+    want = REF.run_alltoall(x, prog)
+    xh = scatter_guest(x, host_prog, axes=(0, 1))
+    out = REF.run_alltoall(xh, host_prog)
+    np.testing.assert_array_equal(gather_guest(out, host_prog, axes=(0, 1)), want)
+    idle = ~host_prog.active_mask_np
+    assert not out[idle].any() and not out[:, idle].any()
+
+
+def test_allreduce_rewrite_bit_exact_and_idle_passthrough():
+    prog = _guest_programs()["allreduce"]
+    host_prog = emulate(prog, EMB)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((prog.n, 4))
+    # idle slots carry garbage that must neither leak in nor change
+    xh = scatter_guest(x, host_prog, fill=123.25)
+    out = REF.run_allreduce(xh, host_prog)
+    np.testing.assert_array_equal(gather_guest(out, host_prog), REF.run_allreduce(x, prog))
+    np.testing.assert_array_equal(out[~host_prog.active_mask_np], 123.25)
+
+
+def test_broadcast_rewrite_bit_exact_vs_native_guest():
+    prog = _guest_programs()["broadcast"]
+    host_prog = emulate(prog, EMB)
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((prog.n, 2))
+    xh = scatter_guest(x, host_prog, fill=-1.5)
+    out = REF.run_broadcast(xh, host_prog)
+    np.testing.assert_array_equal(gather_guest(out, host_prog), REF.run_broadcast(x, prog))
+    np.testing.assert_array_equal(out[~host_prog.active_mask_np], -1.5)
+
+
+@pytest.mark.parametrize("grid,X", [((1, 2), 3), ((2, 2), 2)], ids=str)
+def test_matmul_rewrite_bit_exact(grid, X):
+    """§2 guest grids on a larger host: grid (1,2) = D3(1,2) and grid
+    (2,2) = D3(4,2), both rewritten onto D3(4,4)."""
+    g = mm.MatmulGrid(*grid)
+    prog = lowering.lower(mm.schedule(g))
+    emb = embed(HOST, g.topo.K, g.topo.M, p_set=(1, 3))
+    host_prog = emulate(prog, emb)
+    rng = np.random.default_rng(3)
+    N = g.n * X
+    B = rng.integers(-4, 5, (N, N)).astype(np.float64)
+    A = rng.integers(-4, 5, (N, N)).astype(np.float64)
+    np.testing.assert_array_equal(REF.run_matmul(B, A, host_prog), B @ A)
+    np.testing.assert_array_equal(REF.run_matmul(B, A, host_prog),
+                                  REF.run_matmul(B, A, prog))
+
+
+# ------------------------------------------- conflict-freedom on host
+@pytest.mark.parametrize("c_set,p_set", [(None, None), ((1, 3), (0, 2))],
+                         ids=["contiguous", "scattered"])
+def test_rewritten_schedules_conflict_free_on_host_graph(c_set, p_set):
+    """Dilation-1: every guest hop maps to one host link, so the unified
+    simulator must find ZERO conflicts replaying the rewritten schedule on
+    the literal host graph — the programmatic form of the demo's old
+    hand-rolled ``verify_schedule_on_host`` loop."""
+    emb = embed(HOST, 2, 2, c_set=c_set, p_set=p_set)
+    scheds = {
+        "alltoall": a2a.schedule(GUEST.da_params, GUEST.topo),
+        "allreduce": hc.allreduce_schedule(GUEST.sbh),
+        "broadcast": bc.depth3_schedule(GUEST.topo, (0, 1, 0)),
+    }
+    for kind, sched in scheds.items():
+        hsched = emulate_schedule(sched, emb)
+        assert hsched.topo == HOST
+        hsched.validate()  # every mapped hop is a physical host link
+        verify(HOST, hsched).raise_on_conflict(f"rewritten {kind}")
+
+
+def test_rewritten_pipelined_schedule_conflict_free_on_host_graph():
+    """start_step stamps survive the schedule rewrite: the §5 pipelined
+    wave schedule stays conflict-free under overlapped replay on the
+    host graph."""
+    sched = bc.pipelined_m_broadcast_schedule(GUEST.topo, (0, 0, 1), waves=3)
+    hsched = emulate_schedule(sched, EMB)
+    assert [r.meta.get("start_step") for r in hsched.rounds] == \
+        [r.meta.get("start_step") for r in sched.rounds]
+    verify(HOST, hsched, pipelined=True).raise_on_conflict("pipelined waves")
+
+
+def test_emulate_schedule_is_verify_only():
+    """Lowering metadata is moved under guest_* so the host view cannot be
+    mistaken for a lowerable schedule."""
+    sched = a2a.schedule(GUEST.da_params, GUEST.topo)
+    hsched = emulate_schedule(sched, EMB)
+    assert all("vectors" not in r.meta and "guest_vectors" in r.meta
+               for r in hsched.rounds)
+    with pytest.raises(ValueError, match="on D3"):
+        emulate_schedule(sched, embed(HOST, 2, 3))
+
+
+# ----------------------------------------------- rewrite-only failover
+def _boom(*a, **k):
+    raise AssertionError("recovery path called into a core derivation")
+
+
+def test_plan_recovery_is_rewrite_only(monkeypatch):
+    """Acceptance: zero calls into core.{matmul,alltoall,broadcast,
+    hypercube} derivations (and zero re-lowering) inside plan_recovery."""
+    cluster = ClusterState(DeviceLayout(D3(4, 4)))
+    cluster.prepare_fallbacks()
+    cluster.fail(5)
+    monkeypatch.setattr(a2a, "schedule", _boom)
+    monkeypatch.setattr(mm, "schedule", _boom)
+    monkeypatch.setattr(bc, "depth3_schedule", _boom)
+    monkeypatch.setattr(hc, "allreduce_schedule", _boom)
+    monkeypatch.setattr(lowering, "lower", _boom)
+    plan = cluster.plan_recovery()
+    assert set(plan.programs) >= {"alltoall", "broadcast"}
+    guest = plan.layout.topo
+    dead = DeviceLayout(D3(4, 4)).topo.id_router(5)
+    assert dead not in {HOST.id_router(h) for h in plan.index_map.values()}
+    # the rewritten programs are host-sized and bit-exact vs the library's
+    # natively-lowered guest program
+    native = cluster.library[(guest.K, guest.M)].programs["alltoall"]
+    rewritten = plan.programs["alltoall"]
+    assert rewritten.n == 64 and rewritten.guest_n == native.n
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((native.n, native.n, 2))
+    np.testing.assert_array_equal(
+        gather_guest(
+            REF.run_alltoall(scatter_guest(x, rewritten, axes=(0, 1)), rewritten),
+            rewritten, axes=(0, 1)),
+        REF.run_alltoall(x, native),
+    )
+    # and the host-graph schedules verify conflict-free without re-deriving
+    for kind, sched in plan.schedules.items():
+        verify(D3(4, 4), sched).raise_on_conflict(f"recovery {kind}")
+
+
+def test_plan_recovery_requires_preparation():
+    cluster = ClusterState(DeviceLayout(D3(4, 4)))
+    cluster.fail(5)
+    with pytest.raises(UnpreparedShapeError, match="prepare_fallbacks"):
+        cluster.plan_recovery()
+
+
+def test_recovery_plan_covers_both_drop_regimes():
+    # striped failures: same (d, p) slot across every cabinet -> the old
+    # cabinet-drop-only search would keep nothing; position-drop keeps 4/9
+    cluster = ClusterState(DeviceLayout(D3(3, 3)))
+    cluster.prepare_fallbacks()
+    for c in range(3):
+        cluster.fail(DeviceLayout(D3(3, 3)).topo.router_id((c, 0, 0)))
+    plan = cluster.plan_recovery()
+    assert (plan.layout.topo.K, plan.layout.topo.M) == (3, 2)
+    assert plan.embedding.c_set == (0, 1, 2) and plan.embedding.p_set == (1, 2)
+    survivors = {D3(3, 3).id_router(h) for h in plan.index_map.values()}
+    assert survivors.isdisjoint(cluster.dead)
+
+
+# ---------------------------------------------------- stage-level guards
+def test_partial_perm_validation():
+    Perm(((3, 5), (5, 3)), n=8)  # partial over 8 devices: ok
+    with pytest.raises(ValueError, match="exceed"):
+        Perm(((3, 9), (9, 3)), n=8)
+    with pytest.raises(ValueError, match="cover"):
+        Perm(((3, 5), (5, 3)))  # no n: must cover 0..len-1
+    p = Perm(((1, 2), (2, 1)), n=4)
+    assert p.is_partial and p.sigma == (0, 2, 1, 3) and p.inverse == (0, 2, 1, 3)
+    assert list(p.src_np) == [1, 2] and list(p.dst_np) == [2, 1]
+
+
+def test_active_devices_validation():
+    from repro.runtime.program import CollectiveProgram
+
+    with pytest.raises(ValueError, match="distinct"):
+        CollectiveProgram("alltoall", 4, 1, (), active_devices=(1, 1))
+    with pytest.raises(ValueError, match="exceed"):
+        CollectiveProgram("alltoall", 4, 1, (), active_devices=(0, 7))
+    prog = CollectiveProgram("alltoall", 4, 1, (), active_devices=(2, 0))
+    assert prog.guest_n == 2
+    assert list(prog.active_np) == [2, 0]  # guest order, NOT sorted
+    assert list(prog.active_mask_np) == [True, False, True, False]
+
+
+def test_scatter_gather_guest_roundtrip():
+    prog = emulate(_guest_programs()["alltoall"], EMB)
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((prog.guest_n, prog.guest_n, 2))
+    xh = scatter_guest(x, prog, axes=(0, 1), fill=9.0)
+    assert xh.shape == (prog.n, prog.n, 2)
+    np.testing.assert_array_equal(gather_guest(xh, prog, axes=(0, 1)), x)
+    idle = ~prog.active_mask_np
+    np.testing.assert_array_equal(xh[idle], 9.0)
+    with pytest.raises(ValueError, match="slots"):
+        scatter_guest(np.zeros((3,)), prog)

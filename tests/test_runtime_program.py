@@ -230,7 +230,8 @@ def test_backend_registry():
 def test_program_backends_32dev():
     """Differential reference-vs-JAX on all four programs at (K,M) ∈
     {(4,2), (2,4)}, §2 matmul bit-exact vs jnp.einsum on a device mesh,
-    and pipelined broadcast vs barrier replay — in a subprocess with 32
+    pipelined broadcast vs barrier replay, and the emulation rewrite
+    (guest D3(2,2) on a D3(2,4) host mesh) — in a subprocess with 32
     forced host devices."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"

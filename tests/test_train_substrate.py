@@ -164,13 +164,18 @@ def test_quantize_roundtrip_scale():
 # ------------------------------------------------------- fault tolerance
 def test_cluster_recovery_plan():
     cluster = ClusterState(DeviceLayout(D3(4, 4)))
+    cluster.prepare_fallbacks()  # derive-once; recovery itself is rewrite-only
     cluster.fail(5)
-    new_layout, index_map = cluster.plan_recovery()
-    assert new_layout.n < 64
+    plan = cluster.plan_recovery()
+    assert plan.layout.n < 64
     dead_router = DeviceLayout(D3(4, 4)).topo.id_router(5)
     assert dead_router not in {
-        DeviceLayout(D3(4, 4)).topo.id_router(v) for v in index_map.values()
+        DeviceLayout(D3(4, 4)).topo.id_router(v) for v in plan.index_map.values()
     }
+    # the plan ships rewritten, host-sized programs with the guest image
+    for prog in plan.programs.values():
+        assert prog.n == 64
+        assert prog.active_devices == tuple(plan.embedding.device_map)
 
 
 def test_straggler_policy():
