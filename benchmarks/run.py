@@ -83,6 +83,23 @@ def bench_backends(log=print):
     _, us = _timed(lambda: B @ A)
     log(f"matmul_program,backend=numpy_oracle,grid=2x2,X={X},us_per_call={us:.0f}")
 
+    # pallas_fused backend: global fused replay + interpret-mode kernels on
+    # CPU hosts (compiled kernels + RDMA ring on TPU) — no mesh needed
+    from repro.runtime.backends.pallas_fused import PallasFusedBackend
+
+    pal = PallasFusedBackend()
+    _, us = _timed(lambda: np.asarray(pal.run_alltoall(x, prog)))
+    log(f"backend_alltoall,backend=pallas_fused,n={n},rounds={prog.num_rounds},us_per_call={us:.0f}")
+    from repro.core import hypercube as hc
+
+    sbh_prog = lowering.lower(hc.allreduce_schedule(layout.sbh))
+    xr = rng.standard_normal((n, 64)).astype(np.float32)
+    _, us = _timed(lambda: np.asarray(pal.run_allreduce(xr, sbh_prog)))
+    log(f"backend_allreduce,backend=pallas_fused,n={n},rounds={sbh_prog.num_rounds},us_per_call={us:.0f}")
+    out, us = _timed(lambda: np.asarray(pal.run_matmul(B, A, mprog)))
+    np.testing.assert_array_equal(out, B @ A)
+    log(f"matmul_program,backend=pallas_fused,grid=2x2,X={X},rounds={mprog.num_rounds},us_per_call={us:.0f}")
+
     if jax.device_count() < n:
         log(f"backend_alltoall,backend=dragonfly,n={n},skipped=need_{n}_devices")
         log(f"matmul_program,backend=dragonfly,grid=2x2,skipped=need_{n}_devices")
@@ -111,6 +128,97 @@ def bench_backends(log=print):
     out, us = _timed(lambda: run_mm(bb, aa).block_until_ready())
     np.testing.assert_array_equal(gather_blocks(g, np.asarray(out)), B @ A)
     log(f"matmul_program,backend=dragonfly,grid=2x2,X={X},rounds={mprog.num_rounds},us_per_call={us:.0f}")
+
+
+def bench_optimizer(log=print):
+    """The optimizer pass vs the per-stage replay loop on the SAME lowered
+    programs (§3 all-to-all n=16 and the §2 grid-(2,2) matmul):
+
+      * ``ref_loop`` / ``ref_fused``   — host (reference backend) replay:
+        per-stage advanced indexing vs one batched table op per group;
+      * ``trace_compile_loop`` / ``trace_compile_fused`` — cold jit
+        ``lower().compile()`` wall time of the device replay: the per-stage
+        loop unrolls one collective chain per stage into the HLO, the fused
+        path is one batched scatter / one lax.scan body regardless of
+        program length (this is the cost bench_emulation_rewrite showed
+        dominating);
+      * ``replay_loop`` / ``replay_fused`` — steady-state device replay.
+
+    Loop rows need a 16-device mesh (CI forces it); fused rows replay the
+    global array and run anywhere.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import alltoall as a2a
+    from repro.core import matmul as mm
+    from repro.dist.mesh import dragonfly_layout
+    from repro.runtime import lowering
+    from repro.runtime import optimize as ropt
+    from repro.runtime.backends.jax_ppermute import (
+        JaxPpermuteBackend,
+        _compiled_collective,
+        _compiled_matmul,
+    )
+    from repro.runtime.backends.reference import NumpyReferenceBackend
+
+    n = 16
+    ref = NumpyReferenceBackend()
+    jaxbe = JaxPpermuteBackend()
+    layout = dragonfly_layout(n)
+    prog = lowering.lower(a2a.schedule(layout.da_params, layout.topo))
+    o = ropt.optimize(prog)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, n, 64)).astype(np.float32)
+
+    _, us = _timed(lambda: ref.run_alltoall(x, prog))
+    log(f"optimizer,path=ref_loop,kind=alltoall,n={n},stages={prog.num_permutes},us_per_call={us:.0f}")
+    _, us = _timed(lambda: ref.run_alltoall(x, o))
+    log(f"optimizer,path=ref_fused,kind=alltoall,n={n},fused_ops={o.num_fused_ops},us_per_call={us:.0f}")
+
+    g = mm.MatmulGrid(2, 2)
+    mprog = lowering.lower(mm.schedule(g))
+    mo = ropt.optimize(mprog)
+    X = 16
+    side = g.n * X
+    B = rng.integers(-4, 5, (side, side)).astype(np.float32)
+    A = rng.integers(-4, 5, (side, side)).astype(np.float32)
+    _, us = _timed(lambda: ref.run_matmul(B, A, mprog))
+    log(f"optimizer,path=ref_loop,kind=matmul,grid=2x2,X={X},us_per_call={us:.0f}")
+    _, us = _timed(lambda: ref.run_matmul(B, A, mo))
+    log(f"optimizer,path=ref_fused,kind=matmul,grid=2x2,X={X},us_per_call={us:.0f}")
+
+    # cold trace+compile: __wrapped__ bypasses the closure caches so every
+    # call re-traces and re-compiles from scratch
+    xj = jnp.asarray(x)
+    _, us = _timed(
+        lambda: ropt.jax_alltoall.__wrapped__(o).lower(xj).compile(),
+        warmup=0, iters=2)
+    log(f"optimizer,path=trace_compile_fused,kind=alltoall,n={n},us_per_call={us:.0f}")
+    _, us = _timed(
+        lambda: jax.jit(ropt.build_jax_matmul(mo)).lower(
+            jnp.zeros((mprog.n, X, X), jnp.float32),
+            jnp.zeros((mprog.n, X, X), jnp.float32)).compile(),
+        warmup=0, iters=2)
+    log(f"optimizer,path=trace_compile_fused,kind=matmul,grid=2x2,us_per_call={us:.0f}")
+    _, us = _timed(lambda: ropt.jax_alltoall(o)(xj).block_until_ready())
+    log(f"optimizer,path=replay_fused,kind=alltoall,n={n},us_per_call={us:.0f}")
+
+    if jax.device_count() < n:
+        log(f"optimizer,path=trace_compile_loop,kind=alltoall,n={n},skipped=need_{n}_devices")
+        log(f"optimizer,path=trace_compile_loop,kind=matmul,grid=2x2,skipped=need_{n}_devices")
+        return
+    _, us = _timed(
+        lambda: _compiled_collective.__wrapped__(
+            jaxbe, prog, "alltoall", "df", None, False).lower(xj).compile(),
+        warmup=0, iters=2)
+    log(f"optimizer,path=trace_compile_loop,kind=alltoall,n={n},us_per_call={us:.0f}")
+    _, us = _timed(
+        lambda: _compiled_matmul.__wrapped__(jaxbe, mprog, "df", None).lower(B, A).compile(),
+        warmup=0, iters=2)
+    log(f"optimizer,path=trace_compile_loop,kind=matmul,grid=2x2,us_per_call={us:.0f}")
+    _, us = _timed(lambda: jaxbe.run_alltoall(xj, prog).block_until_ready())
+    log(f"optimizer,path=replay_loop,kind=alltoall,n={n},us_per_call={us:.0f}")
 
 
 def bench_emulation_rewrite(log=print):
@@ -278,8 +386,10 @@ def main(argv=None) -> None:
     bench_broadcast.run(log)
     print("# ---- runtime micro-benchmarks")
     bench_schedule_lowering(log)
-    print("# ---- runtime backends (dragonfly vs fused XLA vs reference)")
+    print("# ---- runtime backends (dragonfly vs fused XLA vs reference vs pallas)")
     bench_backends(log)
+    print("# ---- optimizer pass (fused table replay vs per-stage loop)")
+    bench_optimizer(log)
     print("# ---- emulation rewrite (guest-on-host vs native lowering)")
     bench_emulation_rewrite(log)
     bench_core_micro(log)

@@ -21,6 +21,12 @@ guest-sized collective runs on the HOST mesh axis (``embedding.host``
 routers) with non-participating devices idle — the §2 matmul and §3
 all-to-all of a D3(J,L) workload on a D3(K,M) pod without re-deriving
 anything. Rewrites are cached alongside the native programs.
+
+The cached ``*_program`` getters take ``optimized=True`` to return the
+``runtime.optimize`` fused-table form instead (same cache discipline; the
+fusion itself is memoized per program). Whole-array callers hand those to
+any backend's ``run_*``; the per-shard ``dragonfly_*`` entry points replay
+stages and therefore take ordinary programs.
 """
 
 from __future__ import annotations
@@ -38,6 +44,7 @@ from repro.core.topology import D3
 from repro.dist.mesh import DeviceLayout
 from repro.runtime import lowering
 from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
+from repro.runtime.optimize import optimize
 from repro.runtime.program import CollectiveProgram
 from repro.runtime.rewrite import emulate
 
@@ -61,15 +68,18 @@ def _emulated(prog: CollectiveProgram, guest: D3, embedding: Embedding | None):
 # ----------------------------------------------------------- cached lowering
 @functools.lru_cache(maxsize=None)
 def alltoall_program(
-    layout: DeviceLayout, embedding: Embedding | None = None
+    layout: DeviceLayout, embedding: Embedding | None = None,
+    *, optimized: bool = False,
 ) -> CollectiveProgram:
     prog = lowering.lower(a2a.schedule(layout.da_params, layout.topo))
-    return _emulated(prog, layout.topo, embedding)
+    prog = _emulated(prog, layout.topo, embedding)
+    return optimize(prog) if optimized else prog
 
 
 @functools.lru_cache(maxsize=None)
 def allreduce_program(
-    layout: DeviceLayout, embedding: Embedding | None = None
+    layout: DeviceLayout, embedding: Embedding | None = None,
+    *, optimized: bool = False,
 ) -> CollectiveProgram:
     sbh = layout.sbh
     if sbh is None:
@@ -78,27 +88,32 @@ def allreduce_program(
             "no hypercube all-reduce schedule exists"
         )
     prog = lowering.lower(hc.allreduce_schedule(sbh))
-    return _emulated(prog, layout.topo, embedding)
+    prog = _emulated(prog, layout.topo, embedding)
+    return optimize(prog) if optimized else prog
 
 
 @functools.lru_cache(maxsize=None)
 def broadcast_program(
-    layout: DeviceLayout, root: int, embedding: Embedding | None = None
+    layout: DeviceLayout, root: int, embedding: Embedding | None = None,
+    *, optimized: bool = False,
 ) -> CollectiveProgram:
     prog = lowering.lower(
         bc.depth3_schedule(layout.topo, layout.topo.id_router(root))
     )
-    return _emulated(prog, layout.topo, embedding)
+    prog = _emulated(prog, layout.topo, embedding)
+    return optimize(prog) if optimized else prog
 
 
 @functools.lru_cache(maxsize=None)
 def matmul_program(
-    K: int, M: int, embedding: Embedding | None = None
+    K: int, M: int, embedding: Embedding | None = None,
+    *, optimized: bool = False,
 ) -> CollectiveProgram:
     """§2 program for the K×K array of M×M blocks (K²M² devices); with an
     embedding, the guest D3(K², M) program rewritten onto its host."""
     g = mm.MatmulGrid(K, M)
-    return _emulated(lowering.lower(mm.schedule(g)), g.topo, embedding)
+    prog = _emulated(lowering.lower(mm.schedule(g)), g.topo, embedding)
+    return optimize(prog) if optimized else prog
 
 
 # ------------------------------------------------------------- collectives

@@ -14,4 +14,17 @@ def matmul(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
     return block_matmul(a, b, interpret=not on_tpu, **kw)
 
 
-__all__ = ["matmul", "block_matmul", "block_matmul_ref"]
+def batched_matmul(a: jax.Array, b: jax.Array, *, interpret: bool | None = None,
+                   **kw) -> jax.Array:
+    """Batched block product ``(n, X, X) @ (n, X, X) -> (n, X, X)`` through
+    the Pallas kernel, vmapped over the leading (router-block) axis — the
+    §2 off-network ``mul_a`` contraction of the program executor.
+    ``interpret=None`` auto-selects like ``matmul``."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return jax.vmap(
+        lambda p, q: block_matmul(p, q, interpret=interpret, **kw)
+    )(a, b)
+
+
+__all__ = ["matmul", "batched_matmul", "block_matmul", "block_matmul_ref"]

@@ -66,10 +66,47 @@ guest-ordered host image. The pass guarantees:
     guest, c_set, p_set, program) — so repeated failover re-lowers reuse
     the built host index arrays instead of rebuilding them in jit traces.
 
-``backends.get_backend("jax_ppermute" | "reference")`` instantiates the
-built-ins: ppermutes on a JAX mesh (optionally overlapped), and a pure-
-NumPy host replay used for differential testing and device-free
-validation.
+Optimizer pass guarantees (``optimize.optimize(program)``)
+----------------------------------------------------------
+The performance layer between lowering and execution: ``optimize`` fuses
+every conflict-free step group of a program into one batched table op
+(stacked-σ scatter for ``Perm`` groups, masked-gather tables for ``Match``
+groups, stage-ordered (gather, mask) row stacks for ``ReduceCombine``
+groups) and precomputes all per-stage host arrays into device-ready index
+tensors, so replay is a single batched op or a ``lax.scan`` over tables
+instead of a per-stage Python loop. The pass preserves:
+
+  * **stamps** — fusion follows barrier ``(round_index, step)`` groups;
+    because the schedule verified conflict-free under pipelined replay,
+    the fused barrier-order result equals the ``start_step``-ordered one,
+    so ``pipelined``/``overlap`` callers may substitute an optimized
+    program freely;
+  * **``active_devices``** — emulated programs fuse to partial tables
+    (identity gathers + zero masks outside the embedded subset); idle
+    pass-through holds exactly as for the unfused program, and the
+    reference backend still asserts it;
+  * **conflict-freedom** — only stages the lowering proved concurrent are
+    merged; no fusion crosses a synchronous step;
+  * **bit-exactness** — ``FusedCombine`` rows fold in stage order, group
+    reads see pre-group values: every backend must produce bit-identical
+    results for ``optimize(p)`` and ``p`` (differential-tested in
+    ``tests/test_optimize.py``).
+
+Every backend ``run_*`` accepts either representation. The optimized form
+is the hot path: constant-size HLO regardless of program length (compile
+time), one upload of stacked index tensors (trace time), one advanced-
+indexing pass per group (host replay).
+
+``backends.get_backend("jax_ppermute" | "reference" | "pallas_fused")``
+instantiates the built-ins: ppermutes on a JAX mesh (optionally
+overlapped), a pure-NumPy host replay used for differential testing and
+device-free validation, and the Pallas-fused backend — optimized-table
+replay with Pallas kernels on the ReduceCombine rounds and the §2
+``mul_a`` block contraction. The Pallas kernels run compiled on TPU (where
+``run_allreduce``'s exchange uses the remote-DMA ring pattern) and under
+``interpret=True`` everywhere else, so CPU CI exercises the fused path
+bit-for-bit; interpret mode is a correctness vehicle, not a performance
+one — see ``backends/pallas_fused.py`` for the caveats.
 """
 
-from repro.runtime import backends, compat, lowering, program, rewrite  # noqa: F401
+from repro.runtime import backends, compat, lowering, optimize, program, rewrite  # noqa: F401

@@ -24,14 +24,25 @@ Built-in backends:
     The ground truth for differential testing and host validation. Also the
     enforcement point for emulated programs: it asserts idle-device slots
     stay untouched.
+  * ``pallas_fused`` — replays the OPTIMIZED program form
+    (``runtime.optimize``) with Pallas kernels on the hot spots: the
+    allreduce / matmul ``ReduceCombine`` permute+accumulate rounds run as
+    table-driven kernels (remote-DMA ring exchange on TPU meshes) and the
+    §2 ``mul_a`` contraction goes through ``kernels/block_matmul``.
+    ``interpret=True`` (automatic off-TPU) runs the same kernels in the
+    Pallas interpreter so CPU CI exercises the fused path bit-for-bit.
+
+Every backend's ``run_*`` also accepts an ``optimize.OptimizedProgram``
+(the fused table form) and must produce the same bits for it as for the
+program it was built from.
 
 Emulated (guest-on-host) programs are NOT a separate backend: the
 ``runtime.rewrite.emulate`` pass produces an ordinary ``CollectiveProgram``
 with ``active_devices`` set, and every backend replays it under the
 idle-pass-through rules of the package contract (``runtime/__init__.py``).
 
-Future backends (NCCL-style send/recv lists, Pallas ring kernels) plug in
-as additional modules here.
+Future backends (NCCL-style send/recv lists) plug in as additional modules
+here.
 """
 
 from __future__ import annotations
@@ -48,4 +59,8 @@ def get_backend(name: str = "jax_ppermute", **kwargs):
         from repro.runtime.backends.reference import NumpyReferenceBackend
 
         return NumpyReferenceBackend(**kwargs)
+    if name in ("pallas", "pallas_fused"):
+        from repro.runtime.backends.pallas_fused import PallasFusedBackend
+
+        return PallasFusedBackend(**kwargs)
     raise ValueError(f"unknown backend {name!r}")

@@ -28,11 +28,29 @@ The ``run_*`` wrappers build the shard_map plumbing for whole-array callers
 executable form of the paper: MoE token dispatch calls the per-shard
 ``alltoall`` instead of the generic fused ``lax.all_to_all`` when
 ``--collectives dragonfly`` is on.
+
+Hot-path behavior of the wrappers:
+
+  * meshes and jitted shard_map closures are CACHED per (backend, program,
+    axis, mesh, flags) — repeated collective calls (MoE dispatch per layer)
+    reuse one compiled executable instead of rebuilding the mesh and
+    retracing every call;
+  * ``run_matmul`` scatters/gathers operand blocks (and emulated guest
+    slots) entirely in jnp inside one jitted closure — no ``np.asarray``
+    host sync until the caller materializes the result;
+  * every ``run_*`` accepts an ``optimize.OptimizedProgram`` and routes it
+    to the fused table replay (``lax.scan`` over stacked index tensors on
+    the global array) instead of the per-stage ppermute loop — same bits,
+    constant-size HLO;
+  * ``donate=True`` on the backend donates the wrapper inputs to XLA
+    (buffer reuse for callers that hand over ownership — do NOT enable it
+    when the same arrays are passed again, e.g. benchmark loops).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +58,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.runtime import compat
+from repro.runtime import optimize as _opt
 from repro.runtime.program import (
     CollectiveProgram,
     LocalContract,
@@ -52,9 +71,13 @@ from repro.runtime.program import (
 
 @dataclasses.dataclass(frozen=True)
 class JaxPpermuteBackend:
-    """One ppermute per communication stage on a 1-D router-order axis."""
+    """One ppermute per communication stage on a 1-D router-order axis.
+
+    ``donate=True`` donates the whole-array wrapper inputs to XLA (callers
+    must not reuse the passed buffers afterwards)."""
 
     overlap: bool = False
+    donate: bool = False
     name: str = "jax_ppermute"
 
     # ---------------------------------------------------------- per-shard
@@ -72,6 +95,7 @@ class JaxPpermuteBackend:
         precomputed on the program (cached per stage), so retraces reuse
         them instead of rebuilding host arrays.
         """
+        program = _opt.as_program(program)  # per-shard path replays stages
         _check_kind(program, "alltoall")
         if x.shape[0] != program.n:
             raise ValueError(f"leading dim {x.shape[0]} != mesh axis {program.n}")
@@ -90,6 +114,7 @@ class JaxPpermuteBackend:
         """Recursive-doubling all-reduce (sum): one pairwise exchange per
         cube dimension — the §4 ascend algorithm on the emulated
         hypercube."""
+        program = _opt.as_program(program)
         _check_kind(program, "allreduce")
         idx = jax.lax.axis_index(axis_name)
         for st in self._ordered(program):
@@ -116,6 +141,7 @@ class JaxPpermuteBackend:
         wave dim (num_rounds, ...); wave w's tree moves slice x[w].
         ``pipelined=True`` (or ``overlap`` on the backend) replays in
         start_step order — cross-round overlap where start_step permits."""
+        program = _opt.as_program(program)
         _check_kind(program, "broadcast")
         idx = jax.lax.axis_index(axis_name)
         waves = program.num_rounds > 1
@@ -143,6 +169,7 @@ class JaxPpermuteBackend:
         block of B @ A. Per-device state is (val, acc) driven by the
         program's LocalContract stages; every hop is a ppermute — no
         ``all_gather``, the HLO shows Theorem 1's round structure."""
+        program = _opt.as_program(program)
         _check_kind(program, "matmul")
         idx = jax.lax.axis_index(axis_name)
         dtype = jnp.result_type(b, a)
@@ -184,79 +211,129 @@ class JaxPpermuteBackend:
 
     # ------------------------------------------------- whole-array wrappers
     def run_alltoall(
-        self, x_global, program: CollectiveProgram, axis_name: str = "df", mesh: Mesh | None = None
+        self, x_global, program, axis_name: str = "df", mesh: Mesh | None = None
     ):
         """x_global: (n, n, ...) where x_global[i, j] is the chunk device i
         sends to device j; returns (n, n, ...) with out[i, j] =
-        x_global[j, i, ...] moved by the paper's round schedule."""
-        mesh = mesh or _axis_mesh(program.n, axis_name)
-        f = compat.shard_map(
-            lambda s: self.alltoall(s[0], axis_name, program)[None],
-            mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
-        )
-        return jax.jit(f)(x_global)
+        x_global[j, i, ...] moved by the paper's round schedule.
+
+        ``OptimizedProgram`` inputs take the fused table replay on the
+        GLOBAL array — there is no shard_map, so ``axis_name``/``mesh``
+        do not apply on that path (``donate`` still does)."""
+        if isinstance(program, _opt.OptimizedProgram):
+            _check_kind(program.program, "alltoall")
+            return _opt.jax_alltoall(program, self.donate)(x_global)
+        return _compiled_collective(self, program, "alltoall", axis_name, mesh,
+                                    False)(x_global)
 
     def run_allreduce(
-        self, x_global, program: CollectiveProgram, axis_name: str = "df", mesh: Mesh | None = None
+        self, x_global, program, axis_name: str = "df", mesh: Mesh | None = None
     ):
-        mesh = mesh or _axis_mesh(program.n, axis_name)
-        f = compat.shard_map(
-            lambda s: self.allreduce(s[0], axis_name, program)[None],
-            mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
-        )
-        return jax.jit(f)(x_global)
+        if isinstance(program, _opt.OptimizedProgram):
+            _check_kind(program.program, "allreduce")
+            return _opt.jax_allreduce(program, self.donate)(x_global)
+        return _compiled_collective(self, program, "allreduce", axis_name,
+                                    mesh, False)(x_global)
 
     def run_broadcast(
         self,
         x_global,
-        program: CollectiveProgram,
+        program,
         axis_name: str = "df",
         mesh: Mesh | None = None,
         *,
         pipelined: bool = False,
     ):
         """Single round: x (n, ...). Pipelined waves: x (R, n, ...) with the
-        device axis second."""
-        mesh = mesh or _axis_mesh(program.n, axis_name)
+        device axis second. Optimized programs replay their fused tables on
+        the global array (``axis_name``/``mesh`` do not apply) — barrier
+        order, bit-identical to the pipelined result."""
+        if isinstance(program, _opt.OptimizedProgram):
+            _check_kind(program.program, "broadcast")
+            return _opt.jax_broadcast(program, self.donate)(x_global)
+        return _compiled_collective(self, program, "broadcast", axis_name,
+                                    mesh, pipelined)(x_global)
+
+    def run_matmul(
+        self, B, A, program, axis_name: str = "df", mesh: Mesh | None = None
+    ):
+        """B, A: (N·X, N·X) matrices -> B @ A via the §2 rounds on a mesh of
+        ``program.n`` devices in router order. Emulated programs scatter the
+        guest's blocks to their ``active_devices`` slots of the host mesh
+        (grid metadata is the GUEST grid) and gather them back. The whole
+        scatter -> replay -> gather pipeline is one cached jit — blocks
+        never round-trip through the host; the caller materializes the
+        returned device array when it actually needs the bytes."""
+        prog = _opt.as_program(program)
+        _check_kind(prog, "matmul")
+        if prog.grid is None:
+            raise ValueError("matmul program lacks grid metadata")
+        return _compiled_matmul(self, program, axis_name, mesh)(B, A)
+
+
+@functools.lru_cache(maxsize=None)
+def _axis_mesh(n: int, axis_name: str) -> Mesh:
+    """1-D device mesh in router order, cached per (n, axis) — the device
+    list is fixed for the process lifetime."""
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices for the lowered program, have {len(devs)}")
+    return Mesh(np.array(devs[:n]), (axis_name,))
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_collective(backend: JaxPpermuteBackend, program: CollectiveProgram,
+                         kind: str, axis_name: str, mesh: Mesh | None,
+                         pipelined: bool):
+    """Jitted shard_map closure for a whole-array replay, cached per
+    (backend, program, axis, mesh, flags) so repeated collective calls
+    don't rebuild the mesh or retrace (programs and Mesh are hashable)."""
+    _check_kind(program, kind)
+    mesh = mesh or _axis_mesh(program.n, axis_name)
+    donate = (0,) if backend.donate else ()
+    if kind == "broadcast":
         waves = program.num_rounds > 1
         spec = P(None, axis_name) if waves else P(axis_name)
 
         def local(s):
             s = s[:, 0] if waves else s[0]
-            out = self.broadcast(s, axis_name, program, pipelined=pipelined)
+            out = backend.broadcast(s, axis_name, program, pipelined=pipelined)
             return out[:, None] if waves else out[None]
 
         f = compat.shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)
-        return jax.jit(f)(x_global)
+        return jax.jit(f, donate_argnums=donate)
 
-    def run_matmul(
-        self, B, A, program: CollectiveProgram, axis_name: str = "df", mesh: Mesh | None = None
-    ):
-        """B, A: (N·X, N·X) matrices -> B @ A via the §2 rounds on a mesh of
-        ``program.n`` devices in router order. Emulated programs scatter the
-        guest's blocks to their ``active_devices`` slots of the host mesh
-        (grid metadata is the GUEST grid) and gather them back."""
-        from repro.core.matmul import MatmulGrid, gather_blocks, scatter_blocks
-        from repro.runtime.rewrite import gather_guest, scatter_guest
+    method = backend.alltoall if kind == "alltoall" else backend.allreduce
+    f = compat.shard_map(
+        lambda s: method(s[0], axis_name, program)[None],
+        mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
+    )
+    return jax.jit(f, donate_argnums=donate)
 
-        _check_kind(program, "matmul")
-        if program.grid is None:
-            raise ValueError("matmul program lacks grid metadata")
-        g = MatmulGrid(*program.grid)
-        mesh = mesh or _axis_mesh(program.n, axis_name)
-        b = jnp.asarray(scatter_guest(scatter_blocks(g, np.asarray(B)), program))
-        a = jnp.asarray(scatter_guest(scatter_blocks(g, np.asarray(A)), program))
-        f = compat.shard_map(
-            lambda bb, aa: self.matmul(bb[0], aa[0], axis_name, program)[None],
-            mesh=mesh, in_specs=(P(axis_name), P(axis_name)),
+
+@functools.lru_cache(maxsize=None)
+def _compiled_matmul(backend: JaxPpermuteBackend, program, axis_name: str,
+                     mesh: Mesh | None):
+    """One jitted closure per (backend, program): jnp block scatter (+ guest
+    scatter for emulated programs) -> per-shard replay (or the fused table
+    scan for ``OptimizedProgram``) -> jnp gather. No host syncs inside."""
+    prog = _opt.as_program(program)
+    grid = prog.grid
+    if isinstance(program, _opt.OptimizedProgram):
+        replay = _opt.build_jax_matmul(program)
+    else:
+        m = mesh or _axis_mesh(prog.n, axis_name)
+        replay = compat.shard_map(
+            lambda bb, aa: backend.matmul(bb[0], aa[0], axis_name, program)[None],
+            mesh=m, in_specs=(P(axis_name), P(axis_name)),
             out_specs=P(axis_name),
         )
-        c = jax.jit(f)(b, a)
-        return gather_blocks(g, gather_guest(np.asarray(c), program))
 
+    def f(B, A):
+        b = _opt.jax_scatter_guest(_opt.jax_scatter_blocks(B, grid), prog)
+        a = _opt.jax_scatter_guest(_opt.jax_scatter_blocks(A, grid), prog)
+        c = replay(b, a)
+        return _opt.jax_gather_blocks(_opt.jax_gather_guest(c, prog), grid)
 
-def _axis_mesh(n: int, axis_name: str) -> Mesh:
-    devs = jax.devices()
-    if len(devs) < n:
-        raise RuntimeError(f"need {n} devices for the lowered program, have {len(devs)}")
-    return Mesh(np.array(devs[:n]), (axis_name,))
+    donate = (0, 1) if backend.donate else ()
+    return jax.jit(f, donate_argnums=donate)

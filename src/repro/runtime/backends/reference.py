@@ -15,12 +15,19 @@ idle-isolation guarantee: after replay it ASSERTS that slots belonging to
 idle host devices were never touched (inputs pass through for allreduce/
 broadcast; outputs stay zero for alltoall/matmul). A violated assertion
 means the rewrite or a backend broke the contract, not user error.
+
+Every ``run_*`` entry point also accepts an ``optimize.OptimizedProgram``:
+the replay then applies the fused group tables (one advanced-indexing
+operation per conflict-free step group — the §3 all-to-all collapses to a
+single scatter) instead of the per-stage loop, with identical results and
+the same idle assertions.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.runtime import optimize as _opt
 from repro.runtime.program import (
     CollectiveProgram,
     LocalContract,
@@ -60,16 +67,22 @@ class NumpyReferenceBackend:
 
         Emulated programs: only active (i, j) slots are filled; rows and
         columns of idle devices stay zero (asserted)."""
+        opt = program if isinstance(program, _opt.OptimizedProgram) else None
+        program = _opt.as_program(program)
         _check_kind(program, "alltoall")
         n = program.n
         if x.shape[0] != n or x.shape[1] != n:
             raise ValueError(f"expected leading dims ({n}, {n}), got {x.shape}")
-        out = np.zeros_like(x)
-        for op in program.comm_stages:
-            assert isinstance(op, Perm)
-            # sender s ships chunk x[s, d] to d, who files it under index s —
-            # pairs-based so partial (emulated) perms never touch idle slots.
-            out[op.dst_np, op.src_np] = x[op.src_np, op.dst_np]
+        if opt is not None:
+            out = _opt.np_alltoall(x, opt)
+        else:
+            out = np.zeros_like(x)
+            for op in program.comm_stages:
+                assert isinstance(op, Perm)
+                # sender s ships chunk x[s, d] to d, who files it under index
+                # s — pairs-based so partial (emulated) perms never touch
+                # idle slots.
+                out[op.dst_np, op.src_np] = x[op.src_np, op.dst_np]
         _assert_idle_untouched(program, out, np.zeros_like(out), axes=(0, 1))
         return out
 
@@ -77,16 +90,21 @@ class NumpyReferenceBackend:
     def run_allreduce(self, x: np.ndarray, program: CollectiveProgram) -> np.ndarray:
         """x: (n, ...) -> (n, ...) with every active row the sum over active
         rows; idle rows pass through unchanged (asserted)."""
+        opt = program if isinstance(program, _opt.OptimizedProgram) else None
+        program = _opt.as_program(program)
         _check_kind(program, "allreduce")
         x = np.asarray(x)
-        val = x.copy()
-        for st in program.comm_stages:
-            assert isinstance(st, ReduceCombine)
-            recv = np.zeros_like(val)
-            for s, d in st.link_pairs:
-                recv[d] = val[s]
-            recv[st.self_mask_np] += val[st.self_mask_np]
-            val = val + recv
+        if opt is not None:
+            val = _opt.np_allreduce(x, opt)
+        else:
+            val = x.copy()
+            for st in program.comm_stages:
+                assert isinstance(st, ReduceCombine)
+                recv = np.zeros_like(val)
+                for s, d in st.link_pairs:
+                    recv[d] = val[s]
+                recv[st.self_mask_np] += val[st.self_mask_np]
+                val = val + recv
         _assert_idle_untouched(program, val, x)
         return val
 
@@ -98,25 +116,30 @@ class NumpyReferenceBackend:
         Multi-round (pipelined wave) programs: x (R, n, ...), wave w's tree
         moves slice x[w]. ``pipelined=True`` replays in start_step order —
         results must be identical to barrier order (the IR's pipelined
-        conflict-freedom, projected onto data)."""
+        conflict-freedom, projected onto data). Optimized programs replay
+        their fused barrier-order groups regardless of ``pipelined`` (the
+        results coincide by the same conflict-freedom)."""
+        opt = program if isinstance(program, _opt.OptimizedProgram) else None
+        program = _opt.as_program(program)
         _check_kind(program, "broadcast")
         waves = program.num_rounds > 1
         x = np.asarray(x)
-        val = x.copy()
-        if waves and val.shape[0] != program.num_rounds:
+        if waves and x.shape[0] != program.num_rounds:
             raise ValueError(
-                f"expected leading wave dim {program.num_rounds}, got {val.shape}"
+                f"expected leading wave dim {program.num_rounds}, got {x.shape}"
             )
-        for group in program.step_groups(pipelined=pipelined):
-            pre = val.copy()
-            for st in group:
-                assert isinstance(st, Match)
-                src = [s for s, _ in st.pairs]
-                dst = [d for _, d in st.pairs]
-                if waves:
-                    val[st.round_index][dst] = pre[st.round_index][src]
-                else:
-                    val[dst] = pre[src]
+        if opt is not None:
+            val = _opt.np_broadcast(x, opt)
+        else:
+            val = x.copy()
+            for group in program.step_groups(pipelined=pipelined):
+                pre = val.copy()
+                for st in group:
+                    assert isinstance(st, Match)
+                    if waves:
+                        val[st.round_index][st.dst_np] = pre[st.round_index][st.src_np]
+                    else:
+                        val[st.dst_np] = pre[st.src_np]
         _assert_idle_untouched(program, val, x, axes=(1,) if waves else (0,))
         return val
 
@@ -131,14 +154,15 @@ class NumpyReferenceBackend:
         from repro.core.matmul import MatmulGrid, gather_blocks, scatter_blocks
         from repro.runtime.rewrite import gather_guest, scatter_guest
 
-        _check_kind(program, "matmul")
-        if program.grid is None:
+        prog = _opt.as_program(program)
+        _check_kind(prog, "matmul")
+        if prog.grid is None:
             raise ValueError("matmul program lacks grid metadata")
-        g = MatmulGrid(*program.grid)
-        b = scatter_guest(scatter_blocks(g, np.asarray(B)), program)
-        a = scatter_guest(scatter_blocks(g, np.asarray(A)), program)
+        g = MatmulGrid(*prog.grid)
+        b = scatter_guest(scatter_blocks(g, np.asarray(B)), prog)
+        a = scatter_guest(scatter_blocks(g, np.asarray(A)), prog)
         c = self.matmul_blocks(b, a, program)
-        return gather_blocks(g, gather_guest(c, program))
+        return gather_blocks(g, gather_guest(c, prog))
 
     def matmul_blocks(
         self, b: np.ndarray, a: np.ndarray, program: CollectiveProgram
@@ -146,10 +170,16 @@ class NumpyReferenceBackend:
         """Per-router block replay: b, a (n, X, X) in router-id order ->
         c (n, X, X). The per-device state is (val, acc) driven by the
         LocalContract stages; see runtime.program.LOCAL_FNS."""
+        opt = program if isinstance(program, _opt.OptimizedProgram) else None
+        program = _opt.as_program(program)
         _check_kind(program, "matmul")
         n = program.n
         if b.shape != a.shape or b.shape[0] != n:
             raise ValueError(f"expected blocks (n={n}, X, X), got {b.shape} {a.shape}")
+        if opt is not None:
+            c = _opt.np_matmul_blocks(b, a, opt)
+            _assert_idle_untouched(program, c, np.zeros_like(c))
+            return c
         dtype = np.result_type(b, a)
         val = np.zeros_like(b, dtype=dtype)
         acc = np.zeros_like(val)

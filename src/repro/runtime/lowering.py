@@ -47,8 +47,13 @@ from repro.runtime.program import (
 )
 
 
-def lower(schedule: Schedule) -> CollectiveProgram:
-    """Lower any Schedule to a ``CollectiveProgram`` by round metadata."""
+def lower(schedule: Schedule, *, optimized: bool = False):
+    """Lower any Schedule to a ``CollectiveProgram`` by round metadata.
+
+    ``optimized=True`` additionally runs the fusion pass and returns the
+    ``runtime.optimize.OptimizedProgram`` (batched table ops; replayable by
+    every backend) — the one-call path from IR to the fast replay form.
+    """
     if not schedule.rounds:
         raise ValueError(f"empty schedule {schedule.name!r}")
     family = _round_family(schedule.rounds[0])
@@ -58,7 +63,12 @@ def lower(schedule: Schedule) -> CollectiveProgram:
                 f"schedule {schedule.name!r} mixes round families; "
                 f"got {family} then {_round_family(rnd)}"
             )
-    return _LOWERERS[family](schedule)
+    program = _LOWERERS[family](schedule)
+    if optimized:
+        from repro.runtime.optimize import optimize
+
+        return optimize(program)
+    return program
 
 
 def _round_family(rnd: Round) -> str:

@@ -1,0 +1,607 @@
+"""Program optimizer — fuse a ``CollectiveProgram`` into batched table ops.
+
+``optimize(program)`` is the performance layer between lowering and
+execution. The per-stage replay loop (one ppermute / one masked select per
+stage) is faithful to the paper's round structure but pays a per-stage cost
+three times over: Python dispatch while tracing, one HLO op chain per stage
+while compiling, and per-stage host-array uploads while running. The
+optimizer removes all three without changing a single output bit:
+
+  * **step-group fusion** — every conflict-free step group (the maximal
+    stage runs ``CollectiveProgram.step_groups`` yields) collapses into ONE
+    batched op: consecutive ``Perm``s become a single stacked-σ scatter
+    table (``FusedExchange``), a ``Match`` group becomes one masked-gather
+    table (``FusedSelect``), a ``ReduceCombine`` group becomes stacked
+    (gather, mask) rows applied in stage order (``FusedCombine``), and
+    ``LocalContract`` stages keep their vocabulary (``FusedLocal``);
+  * **table stacking** — per-group host arrays are precomputed into
+    device-ready index tensors stacked along a leading group (or round)
+    axis, so the JAX replay is a ``lax.scan`` over tables — the traced
+    graph is one scan body regardless of program length — instead of a
+    Python loop that unrolls every stage into the HLO;
+  * **group-level vectorization on the host** — the NumPy replay of an
+    optimized program applies each fused group as one advanced-indexing
+    operation (the §3 all-to-all collapses to a single scatter), which is
+    what the ``replay_*`` rows of ``bench_emulation_rewrite`` pay.
+
+What ``optimize()`` preserves (the contract ``runtime/__init__.py``
+documents and ``tests/test_optimize.py`` enforces):
+
+  * **bit-exactness** — fused replay applies every group against the
+    pre-group values with writes landing together, and ``FusedCombine``
+    folds rows in stage order, so results are bit-identical to the
+    per-stage replay on every backend, for native AND emulated programs;
+  * **stamps** — the fused ops are built from barrier order
+    ``(round_index, step)`` groups; because the schedule verified
+    conflict-free under pipelined replay too, the barrier-order fused
+    result equals the ``start_step``-ordered replay (so ``pipelined=True``
+    / ``overlap=True`` callers may use an optimized program unchanged);
+  * **``active_devices``** — emulated (guest-on-host) programs fuse to
+    partial tables: idle devices get identity gathers and zero masks, so
+    they pass through exactly as the backend contract requires;
+  * **conflict-freedom** — fusion only merges stages the lowering already
+    proved concurrent; no group ever merges across a synchronous step.
+
+``optimize`` is memoized per program (programs are frozen/hashable); the
+jitted JAX replay closures are memoized per optimized program, so repeated
+collective calls (MoE dispatch per layer) reuse one compiled executable.
+
+Pure NumPy table construction — jax is imported lazily inside the JAX
+replay builders so the reference backend can replay optimized programs
+without pulling in jax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.runtime.program import (
+    CollectiveProgram,
+    LocalContract,
+    Match,
+    Perm,
+    ReduceCombine,
+)
+
+
+# ---------------------------------------------------------------------------
+# Fused ops: one per conflict-free step group.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FusedExchange:
+    """All ``Perm`` stages of an all-to-all program as one scatter table:
+    ``out[dst[t], src[t]] = x[src[t], dst[t]]`` for every pair t. Valid
+    because every stage reads the immutable input and the full exchange
+    delivers each ordered (src, dst) chunk exactly once — so the whole
+    program is one batched permute, independent of replay order."""
+
+    src: np.ndarray  # (T,) int32 senders, concatenated over stages
+    dst: np.ndarray  # (T,) int32 receivers
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FusedSelect:
+    """One ``Match`` step group: ``val = where(mask, val[gather], val)``.
+    ``gather`` is identity outside the group's destinations, so idle
+    (emulated) devices read themselves and the mask keeps their value."""
+
+    gather: np.ndarray  # (n,) int32
+    mask: np.ndarray    # (n,) bool
+    wave: int = 0       # broadcast wave (round) the group acts on
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FusedCombine:
+    """One ``ReduceCombine`` step group as stacked (gather, mask) rows.
+    Row k contributes ``where(mask[k], val[gather[k]], 0)`` and rows fold
+    into the accumulator IN ORDER (k-sequential adds), reproducing the
+    per-stage accumulation bit-for-bit. Identity (self) pairs become rows
+    with identity gathers."""
+
+    gather: np.ndarray  # (k, n) int32
+    mask: np.ndarray    # (k, n) bool
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FusedLocal:
+    """A ``LocalContract`` stage (matmul state machine step)."""
+
+    fn: str
+    mask: np.ndarray | None = None  # (n,) bool for store_c
+
+
+FusedOp = FusedExchange | FusedSelect | FusedCombine | FusedLocal
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class OptimizedProgram:
+    """A ``CollectiveProgram`` compiled to fused table ops.
+
+    Carries the source program for metadata (``kind``, ``n``, ``grid``,
+    ``root``, ``active_devices``) — backends accept an ``OptimizedProgram``
+    anywhere they accept a program and route it to the fused replay.
+    ``uniform_rounds`` marks matmul programs whose per-round op recipes are
+    identical (always true for the §2 lowering), enabling the round-scan
+    replay; non-uniform programs fall back to an unrolled-but-fused loop.
+    """
+
+    program: CollectiveProgram
+    ops: tuple[FusedOp, ...]
+    uniform_rounds: bool = False
+
+    @property
+    def kind(self) -> str:
+        return self.program.kind
+
+    @property
+    def n(self) -> int:
+        return self.program.n
+
+    @property
+    def num_fused_ops(self) -> int:
+        return len(self.ops)
+
+
+def as_program(program) -> CollectiveProgram:
+    """The underlying ``CollectiveProgram`` of either representation."""
+    return program.program if isinstance(program, OptimizedProgram) else program
+
+
+# ---------------------------------------------------------------------------
+# Table builders.
+# ---------------------------------------------------------------------------
+
+def _select_of(group, n: int, wave: int = 0) -> FusedSelect:
+    gather = np.arange(n, dtype=np.int32)
+    mask = np.zeros(n, bool)
+    for st in group:
+        for s, d in st.pairs:
+            if mask[d]:  # the lowering guarantees distinct Match dests
+                raise ValueError("Match group has a repeated destination")
+            gather[d] = s
+            mask[d] = True
+    return FusedSelect(gather, mask, wave)
+
+
+def _combine_of(group, n: int) -> FusedCombine:
+    gathers: list[np.ndarray] = []
+    masks: list[np.ndarray] = []
+    for st in group:
+        if st.link_pairs:
+            g = np.arange(n, dtype=np.int32)
+            m = np.zeros(n, bool)
+            for s, d in st.link_pairs:
+                g[d] = s
+                m[d] = True
+            gathers.append(g)
+            masks.append(m)
+        if st.self_mask_np.any():
+            gathers.append(np.arange(n, dtype=np.int32))
+            masks.append(st.self_mask_np.copy())
+    return FusedCombine(np.stack(gathers), np.stack(masks))
+
+
+def _build_alltoall(program: CollectiveProgram) -> tuple[FusedOp, ...]:
+    assert all(isinstance(st, Perm) for st in program.comm_stages)
+    src = np.concatenate([st.src_np for st in program.comm_stages])
+    dst = np.concatenate([st.dst_np for st in program.comm_stages])
+    return (FusedExchange(src.astype(np.int32), dst.astype(np.int32)),)
+
+
+def _build_allreduce(program: CollectiveProgram) -> tuple[FusedOp, ...]:
+    return tuple(
+        _combine_of(group, program.n) for group in program.step_groups()
+    )
+
+
+def _build_broadcast(program: CollectiveProgram) -> tuple[FusedOp, ...]:
+    waves = program.num_rounds > 1
+    return tuple(
+        _select_of(group, program.n,
+                   wave=group[0].round_index if waves else 0)
+        for group in program.step_groups()
+    )
+
+
+def _build_matmul(program: CollectiveProgram) -> tuple[FusedOp, ...]:
+    ops: list[FusedOp] = []
+    for group in program.step_groups():
+        st = group[0]
+        if isinstance(st, LocalContract):
+            mask = st.mask_np.copy() if st.fn == "store_c" else None
+            ops.append(FusedLocal(st.fn, mask))
+        elif isinstance(st, Match):
+            ops.append(_select_of(group, program.n))
+        elif isinstance(st, ReduceCombine):
+            ops.append(_combine_of(group, program.n))
+        else:  # pragma: no cover - Perm never appears in matmul programs
+            raise TypeError(f"unexpected stage {st!r} in matmul program")
+    return tuple(ops)
+
+
+def _op_signature(op: FusedOp):
+    if isinstance(op, FusedLocal):
+        return ("local", op.fn)
+    if isinstance(op, FusedSelect):
+        return ("select",)
+    if isinstance(op, FusedCombine):
+        return ("combine", op.gather.shape[0])
+    return ("exchange",)
+
+
+def _matmul_round_template(program: CollectiveProgram,
+                           ops: tuple[FusedOp, ...]) -> bool:
+    """True iff every round fuses to the same op recipe (same op kinds and
+    combine widths) — the condition for the round-scan replay."""
+    rounds = program.num_rounds
+    if rounds == 0 or len(ops) % rounds:
+        return False
+    period = len(ops) // rounds
+    sig = [_op_signature(op) for op in ops]
+    return all(sig[i] == sig[i % period] for i in range(len(sig)))
+
+
+_BUILDERS = {
+    "alltoall": _build_alltoall,
+    "allreduce": _build_allreduce,
+    "broadcast": _build_broadcast,
+    "matmul": _build_matmul,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def optimize(program: CollectiveProgram) -> OptimizedProgram:
+    """Fuse ``program`` into batched table ops (memoized per program)."""
+    if isinstance(program, OptimizedProgram):
+        return program
+    ops = _BUILDERS[program.kind](program)
+    uniform = (
+        program.kind == "matmul" and _matmul_round_template(program, ops)
+    )
+    return OptimizedProgram(program, ops, uniform_rounds=uniform)
+
+
+# ---------------------------------------------------------------------------
+# NumPy replay (the reference backend's fused path).
+# ---------------------------------------------------------------------------
+
+def _expand(mask: np.ndarray, ndim: int):
+    """Broadcast a (n,) mask over an array's trailing feature dims."""
+    return mask.reshape(mask.shape + (1,) * (ndim - mask.ndim))
+
+
+def np_alltoall(x: np.ndarray, opt: OptimizedProgram) -> np.ndarray:
+    (op,) = opt.ops
+    out = np.zeros_like(x)
+    out[op.dst, op.src] = x[op.src, op.dst]
+    return out
+
+
+def np_allreduce(x: np.ndarray, opt: OptimizedProgram) -> np.ndarray:
+    val = np.asarray(x).copy()
+    for op in opt.ops:
+        recv = np.zeros_like(val)
+        for g, m in zip(op.gather, op.mask):
+            recv[m] += val[g[m]]  # stage-order fold, masked rows only
+        val = val + recv
+    return val
+
+
+def np_broadcast(x: np.ndarray, opt: OptimizedProgram) -> np.ndarray:
+    waves = opt.program.num_rounds > 1
+    val = np.asarray(x).copy()
+    for op in opt.ops:
+        sl = val[op.wave] if waves else val
+        sel = np.where(_expand(op.mask, sl.ndim), sl[op.gather], sl)
+        if waves:
+            val[op.wave] = sel
+        else:
+            val = sel
+    return val
+
+
+def np_matmul_blocks(b: np.ndarray, a: np.ndarray,
+                     opt: OptimizedProgram) -> np.ndarray:
+    dtype = np.result_type(b, a)
+    a = a.astype(dtype)
+    val = np.zeros_like(b, dtype=dtype)
+    acc = np.zeros_like(val)
+    c = np.zeros_like(val)
+    for op in opt.ops:
+        if isinstance(op, FusedLocal):
+            if op.fn == "load_b":
+                val = b.astype(dtype).copy()
+                acc = np.zeros_like(val)
+            elif op.fn == "mul_a":
+                val = np.einsum("nab,nbc->nac", val, a)
+                acc = np.zeros_like(val)
+            elif op.fn == "promote":
+                val, acc = acc, np.zeros_like(acc)
+            elif op.fn == "store_c":
+                m = _expand(op.mask, c.ndim)
+                c = np.where(m, val, c)
+        elif isinstance(op, FusedSelect):
+            val = np.where(_expand(op.mask, val.ndim), val[op.gather], val)
+        else:
+            for g, m in zip(op.gather, op.mask):
+                acc[m] = acc[m] + val[g[m]]  # stage-order fold, masked rows
+    return c
+
+
+# ---------------------------------------------------------------------------
+# JAX replay: jitted lax.scan over stacked tables, memoized per program.
+# jax imported lazily — the reference path above must stay jax-free.
+# ---------------------------------------------------------------------------
+
+def _combine_fold(acc, val, gather, mask, where):
+    """Fold combine rows into ``acc`` in stage order (bit-exactness)."""
+    for k in range(gather.shape[0]):
+        acc = acc + where(mask[k], val[gather[k]])
+    return acc
+
+
+def stacked_combine_tables(opt: OptimizedProgram) -> tuple[np.ndarray, np.ndarray]:
+    """(R, k, n) gather/mask tensors over an allreduce program's combine
+    groups, narrow groups padded with identity-gather / zero-mask rows so
+    every scan step (or kernel round) sees one table shape — a zero-masked
+    row adds exact zeros, preserving bit-exactness. Shared by the scan
+    replay below and the pallas_fused reduce kernels."""
+    k = max(op.gather.shape[0] for op in opt.ops)
+    n = opt.n
+    ident = np.arange(n, dtype=np.int32)
+    gat = np.stack([
+        np.concatenate([op.gather,
+                        np.broadcast_to(ident, (k - op.gather.shape[0], n))])
+        for op in opt.ops
+    ]).astype(np.int32)
+    msk = np.stack([
+        np.concatenate([op.mask,
+                        np.zeros((k - op.mask.shape[0], n), bool)])
+        for op in opt.ops
+    ])
+    return gat, msk
+
+
+def _donate(donate: bool):
+    return (0,) if donate else ()
+
+
+@functools.lru_cache(maxsize=None)
+def jax_alltoall(opt: OptimizedProgram, donate: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    (op,) = opt.ops
+    src, dst = jnp.asarray(op.src), jnp.asarray(op.dst)
+
+    def replay(x):
+        return jnp.zeros_like(x).at[dst, src].set(x[src, dst])
+
+    return jax.jit(replay, donate_argnums=_donate(donate))
+
+
+@functools.lru_cache(maxsize=None)
+def jax_allreduce(opt: OptimizedProgram, donate: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    gat, msk = stacked_combine_tables(opt)
+    gat_j, msk_j = jnp.asarray(gat), jnp.asarray(msk)
+
+    def replay(x):
+        def where(m, v):
+            return jnp.where(m.reshape(m.shape + (1,) * (x.ndim - 1)), v, 0)
+
+        def body(val, tables):
+            g, m = tables
+            return val + _combine_fold(jnp.zeros_like(val), val, g, m, where), None
+
+        val, _ = jax.lax.scan(body, x, (gat_j, msk_j))
+        return val
+
+    return jax.jit(replay, donate_argnums=_donate(donate))
+
+
+@functools.lru_cache(maxsize=None)
+def jax_broadcast(opt: OptimizedProgram, donate: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    waves = opt.program.num_rounds > 1
+    gat = jnp.asarray(np.stack([op.gather for op in opt.ops]))
+    msk = jnp.asarray(np.stack([op.mask for op in opt.ops]))
+    wav = jnp.asarray(np.asarray([op.wave for op in opt.ops], np.int32))
+
+    def replay(x):
+        val = x if waves else x[None]
+
+        def body(v, tables):
+            g, m, w = tables
+            sl = v[w]
+            sel = jnp.where(m.reshape(m.shape + (1,) * (sl.ndim - 1)),
+                            sl[g], sl)
+            return v.at[w].set(sel), None
+
+        val, _ = jax.lax.scan(body, val, (gat, msk, wav))
+        return val if waves else val[0]
+
+    return jax.jit(replay, donate_argnums=_donate(donate))
+
+
+def _matmul_round_ops(opt: OptimizedProgram):
+    """ops regrouped per round (requires ``uniform_rounds``)."""
+    period = len(opt.ops) // opt.program.num_rounds
+    return [opt.ops[i:i + period] for i in range(0, len(opt.ops), period)], period
+
+
+def build_jax_matmul(opt: OptimizedProgram, *, mul_fn=None, combine_fn=None):
+    """The fused §2 replay on (n, X, X) blocks: a ``lax.scan`` over rounds
+    when the per-round recipes are uniform, an unrolled fused loop
+    otherwise. ``mul_fn(val, a)`` / ``combine_fn(acc, val, gather, mask)``
+    hooks let the pallas_fused backend route ``mul_a`` through the Pallas
+    block kernel and the combine groups through the table kernel."""
+    import jax
+    import jax.numpy as jnp
+
+    def where(m, v):
+        return jnp.where(m.reshape(m.shape + (1,) * (v.ndim - 1)), v, 0)
+
+    mul = mul_fn or (lambda val, a: val @ a)
+    comb = combine_fn or (
+        lambda acc, val, g, m: _combine_fold(acc, val, g, m, where)
+    )
+
+    def apply_op(op, tables, b, a, val, acc, c):
+        if isinstance(op, FusedLocal):
+            if op.fn == "load_b":
+                val, acc = b, jnp.zeros_like(acc)
+            elif op.fn == "mul_a":
+                val, acc = mul(val, a), jnp.zeros_like(acc)
+            elif op.fn == "promote":
+                val, acc = acc, jnp.zeros_like(acc)
+            elif op.fn == "store_c":
+                c = jnp.where(tables["mask"].reshape(op.mask.shape + (1, 1)),
+                              val, c)
+            return val, acc, c
+        if isinstance(op, FusedSelect):
+            val = jnp.where(tables["mask"].reshape(op.mask.shape + (1, 1)),
+                            val[tables["gather"]], val)
+            return val, acc, c
+        acc = comb(acc, val, tables["gather"], tables["mask"])
+        return val, acc, c
+
+    def tables_of(op):
+        if isinstance(op, FusedLocal):
+            return ({"mask": np.asarray(op.mask)} if op.fn == "store_c" else {})
+        return {"gather": op.gather, "mask": op.mask}
+
+    if opt.uniform_rounds:
+        rounds, period = _matmul_round_ops(opt)
+        template = rounds[0]
+        # stack each op position's tables across rounds -> scan xs
+        xs = []
+        for pos in range(period):
+            stacked = {
+                key: jnp.asarray(np.stack([tables_of(r[pos])[key] for r in rounds]))
+                for key in tables_of(template[pos])
+            }
+            xs.append(stacked)
+
+        def replay(b, a):
+            dtype = jnp.result_type(b, a)
+            b, a = b.astype(dtype), a.astype(dtype)
+            zero = jnp.zeros_like(b)
+
+            def body(c, slices):
+                val = acc = zero
+                for pos, op in enumerate(template):
+                    val, acc, c = apply_op(op, slices[pos], b, a, val, acc, c)
+                return c, None
+
+            c, _ = jax.lax.scan(body, zero, tuple(xs))
+            return c
+
+        return replay
+
+    consts = [
+        {key: jnp.asarray(v) for key, v in tables_of(op).items()}
+        for op in opt.ops
+    ]
+
+    def replay(b, a):
+        dtype = jnp.result_type(b, a)
+        b, a = b.astype(dtype), a.astype(dtype)
+        val = acc = c = jnp.zeros_like(b)
+        for op, tabs in zip(opt.ops, consts):
+            val, acc, c = apply_op(op, tabs, b, a, val, acc, c)
+        return c
+
+    return replay
+
+
+@functools.lru_cache(maxsize=None)
+def jax_matmul_blocks(opt: OptimizedProgram):
+    import jax
+
+    return jax.jit(build_jax_matmul(opt))
+
+
+# ---------------------------------------------------------------------------
+# Whole-matrix matmul wrapper shared by the JAX-side backends: scatter the
+# (N·X, N·X) operands to router blocks (and guest blocks to their host
+# slots) entirely in jnp — no host round-trip until the caller's boundary.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _block_index(grid: tuple[int, int]) -> tuple[np.ndarray, np.ndarray]:
+    """Router-id-ordered (block-row, block-col) index arrays of the §2
+    storage map (host-built once per grid, device-uploaded per trace)."""
+    from repro.core.matmul import MatmulGrid, block_of_router
+
+    g = MatmulGrid(*grid)
+    bi = np.empty(g.topo.num_routers, np.int32)
+    bj = np.empty(g.topo.num_routers, np.int32)
+    for r in g.topo.routers():
+        i, j = block_of_router(g, r)
+        rid = g.topo.router_id(r)
+        bi[rid], bj[rid] = i, j
+    return bi, bj
+
+
+def jax_scatter_blocks(mat, grid: tuple[int, int]):
+    """(N·X, N·X) -> (n_routers, X, X) on device (jnp twin of
+    ``core.matmul.scatter_blocks``)."""
+    import jax.numpy as jnp
+
+    bi, bj = _block_index(grid)
+    N = grid[0] * grid[1]
+    mat = jnp.asarray(mat)
+    X = mat.shape[0] // N
+    blocks = mat.reshape(N, X, N, X).transpose(0, 2, 1, 3)
+    return blocks[bi, bj]
+
+
+def jax_gather_blocks(blocks, grid: tuple[int, int]):
+    """(n_routers, X, X) -> (N·X, N·X) on device."""
+    import jax.numpy as jnp
+
+    bi, bj = _block_index(grid)
+    N = grid[0] * grid[1]
+    X = blocks.shape[1]
+    out = jnp.zeros((N, N, X, X), blocks.dtype).at[bi, bj].set(blocks)
+    return out.transpose(0, 2, 1, 3).reshape(N * X, N * X)
+
+
+def jax_scatter_guest(x, program: CollectiveProgram, *, axes=(0,)):
+    """jnp twin of ``rewrite.scatter_guest`` (identity for native)."""
+    import jax.numpy as jnp
+
+    if program.active_devices is None:
+        return jnp.asarray(x)
+    idx = program.active_np
+    out = jnp.asarray(x)
+    for ax in axes:
+        shape = list(out.shape)
+        shape[ax] = program.n
+        sel = [slice(None)] * out.ndim
+        sel[ax] = idx
+        out = jnp.zeros(shape, out.dtype).at[tuple(sel)].set(out)
+    return out
+
+
+def jax_gather_guest(x, program: CollectiveProgram, *, axes=(0,)):
+    import jax.numpy as jnp
+
+    if program.active_devices is None:
+        return jnp.asarray(x)
+    idx = program.active_np
+    out = jnp.asarray(x)
+    for ax in axes:
+        sel = [slice(None)] * out.ndim
+        sel[ax] = idx
+        out = out[tuple(sel)]
+    return out

@@ -159,6 +159,14 @@ class Match:
         mask[list(self.dsts)] = True
         return mask
 
+    @cached_property
+    def src_np(self) -> np.ndarray:
+        return np.asarray([s for s, _ in self.pairs], np.int32)
+
+    @cached_property
+    def dst_np(self) -> np.ndarray:
+        return np.asarray(self.dsts, np.int32)
+
 
 @dataclasses.dataclass(frozen=True)
 class ReduceCombine:

@@ -1,0 +1,212 @@
+"""Optimizer pass: fused table replay must be bit-exact vs the per-stage
+loop on all four algorithm kinds AND on emulated guest programs, on both
+the reference backend and the JAX table replay (which runs on the global
+array — a single CPU device suffices, no forced mesh).
+
+Structure invariants (what fused where), cache identity, and the new
+pipelined §3 schedule ride along. Device-mesh differentials of optimized
+programs live in ``program_check_script.py`` (32 forced devices).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import alltoall as a2a
+from repro.core import broadcast as bc
+from repro.core import hypercube as hc
+from repro.core import matmul as mm
+from repro.core.emulation import embed
+from repro.core.topology import D3
+from repro.dist.mesh import DeviceLayout
+from repro.runtime import lowering
+from repro.runtime import optimize as opt
+from repro.runtime.backends import get_backend
+from repro.runtime.backends.reference import NumpyReferenceBackend
+from repro.runtime.rewrite import emulate, scatter_guest
+
+REF = NumpyReferenceBackend()
+JAX = get_backend("jax_ppermute")
+LAYOUT = DeviceLayout(D3(4, 2))
+EMB = embed(D3(4, 4), 2, 2, c_set=(1, 3), p_set=(0, 2))
+GUEST = DeviceLayout(D3(2, 2))
+
+
+def _programs():
+    return {
+        "alltoall": lowering.lower(a2a.schedule(LAYOUT.da_params, LAYOUT.topo)),
+        "allreduce": lowering.lower(hc.allreduce_schedule(LAYOUT.sbh)),
+        "broadcast": lowering.lower(bc.depth3_schedule(LAYOUT.topo, (0, 1, 0))),
+        "matmul": lowering.lower(mm.schedule(mm.MatmulGrid(2, 2))),
+    }
+
+
+# --------------------------------------------------------------- structure
+def test_fusion_structure():
+    progs = _programs()
+    o = opt.optimize(progs["alltoall"])
+    # the whole §3 exchange fuses to ONE batched scatter table
+    assert o.num_fused_ops == 1
+    (ex,) = o.ops
+    assert isinstance(ex, opt.FusedExchange)
+    assert len(ex.src) == progs["alltoall"].num_permutes * o.n
+
+    o = opt.optimize(progs["allreduce"])
+    assert o.num_fused_ops == progs["allreduce"].num_rounds
+    assert all(isinstance(op, opt.FusedCombine) for op in o.ops)
+
+    o = opt.optimize(progs["broadcast"])
+    assert o.num_fused_ops == sum(1 for _ in progs["broadcast"].step_groups())
+    assert all(isinstance(op, opt.FusedSelect) for op in o.ops)
+
+    o = opt.optimize(progs["matmul"])
+    assert o.uniform_rounds  # the §2 lowering emits identical round recipes
+    assert o.num_fused_ops % progs["matmul"].num_rounds == 0
+
+
+def test_optimize_is_cached_and_idempotent():
+    prog = _programs()["alltoall"]
+    first = opt.optimize(prog)
+    assert opt.optimize(prog) is first
+    assert opt.optimize(first) is first
+    # lru keying is by program EQUALITY — equal programs share one rewrite
+    assert opt.as_program(first) == prog
+    assert first.kind == "alltoall" and first.n == prog.n
+
+
+def test_lower_optimized_kwarg():
+    sched = bc.depth3_schedule(LAYOUT.topo, (0, 0, 1))
+    o = lowering.lower(sched, optimized=True)
+    assert isinstance(o, opt.OptimizedProgram)
+    assert o.program == lowering.lower(sched)
+
+
+# ----------------------------------------------- bit-exact replay, 4 kinds
+def test_optimized_alltoall_bit_exact():
+    prog = _programs()["alltoall"]
+    o = opt.optimize(prog)
+    n = prog.n
+    x = np.random.default_rng(0).standard_normal((n, n, 3)).astype(np.float32)
+    want = REF.run_alltoall(x, prog)
+    np.testing.assert_array_equal(REF.run_alltoall(x, o), want)
+    np.testing.assert_array_equal(np.asarray(JAX.run_alltoall(x, o)), want)
+
+
+def test_optimized_allreduce_bit_exact():
+    prog = _programs()["allreduce"]
+    o = opt.optimize(prog)
+    x = np.random.default_rng(1).standard_normal((prog.n, 4)).astype(np.float32)
+    want = REF.run_allreduce(x, prog)
+    np.testing.assert_array_equal(REF.run_allreduce(x, o), want)
+    np.testing.assert_array_equal(np.asarray(JAX.run_allreduce(x, o)), want)
+
+
+def test_optimized_broadcast_bit_exact():
+    prog = _programs()["broadcast"]
+    o = opt.optimize(prog)
+    x = np.random.default_rng(2).standard_normal((prog.n, 4)).astype(np.float32)
+    want = REF.run_broadcast(x, prog)
+    np.testing.assert_array_equal(REF.run_broadcast(x, o), want)
+    np.testing.assert_array_equal(np.asarray(JAX.run_broadcast(x, o)), want)
+
+
+def test_optimized_pipelined_broadcast_waves():
+    """Multi-round wave programs: fused replay == barrier == pipelined."""
+    prog = lowering.lower(
+        bc.pipelined_m_broadcast_schedule(LAYOUT.topo, (0, 0, 1), waves=4)
+    )
+    o = opt.optimize(prog)
+    x = np.random.default_rng(3).standard_normal(
+        (prog.num_rounds, prog.n, 3)).astype(np.float32)
+    want = REF.run_broadcast(x, prog)
+    np.testing.assert_array_equal(REF.run_broadcast(x, prog, pipelined=True), want)
+    np.testing.assert_array_equal(REF.run_broadcast(x, o), want)
+    np.testing.assert_array_equal(REF.run_broadcast(x, o, pipelined=True), want)
+    np.testing.assert_array_equal(np.asarray(JAX.run_broadcast(x, o)), want)
+
+
+@pytest.mark.parametrize("grid,X", [((2, 2), 1), ((2, 2), 3), ((1, 4), 2)], ids=str)
+def test_optimized_matmul_bit_exact(grid, X):
+    prog = lowering.lower(mm.schedule(mm.MatmulGrid(*grid)))
+    o = opt.optimize(prog)
+    rng = np.random.default_rng(4)
+    N = mm.MatmulGrid(*grid).n * X
+    B = rng.integers(-4, 5, (N, N)).astype(np.float32)
+    A = rng.integers(-4, 5, (N, N)).astype(np.float32)
+    want = REF.run_matmul(B, A, prog)
+    np.testing.assert_array_equal(want, B @ A)
+    np.testing.assert_array_equal(REF.run_matmul(B, A, o), want)
+    np.testing.assert_array_equal(np.asarray(JAX.run_matmul(B, A, o)), want)
+
+
+# ------------------------------------------------------- emulated programs
+def test_optimized_emulated_programs_bit_exact():
+    """Guest D3(2,2) programs rewritten onto a D3(4,4) host: the optimizer
+    fuses partial tables and idle devices still pass through (the reference
+    backend asserts it on the optimized replay too)."""
+    ng = GUEST.n
+    rng = np.random.default_rng(5)
+
+    hp = emulate(lowering.lower(a2a.schedule(GUEST.da_params, GUEST.topo)), EMB)
+    o = opt.optimize(hp)
+    x = scatter_guest(
+        rng.standard_normal((ng, ng, 2)).astype(np.float32), hp, axes=(0, 1))
+    want = REF.run_alltoall(x, hp)
+    np.testing.assert_array_equal(REF.run_alltoall(x, o), want)
+    np.testing.assert_array_equal(np.asarray(JAX.run_alltoall(x, o)), want)
+
+    hp = emulate(lowering.lower(hc.allreduce_schedule(GUEST.sbh)), EMB)
+    o = opt.optimize(hp)
+    xr = scatter_guest(
+        rng.standard_normal((ng, 4)).astype(np.float32), hp, fill=7.0)
+    want = REF.run_allreduce(xr, hp)
+    np.testing.assert_array_equal(REF.run_allreduce(xr, o), want)
+    np.testing.assert_array_equal(np.asarray(JAX.run_allreduce(xr, o)), want)
+    assert np.all(np.asarray(JAX.run_allreduce(xr, o))[~hp.active_mask_np] == 7.0)
+
+    g = mm.MatmulGrid(1, 2)
+    hp = emulate(lowering.lower(mm.schedule(g)),
+                 embed(D3(4, 4), g.topo.K, g.topo.M, p_set=(0, 2)))
+    o = opt.optimize(hp)
+    N = g.n * 2
+    B = rng.integers(-4, 5, (N, N)).astype(np.float32)
+    A = rng.integers(-4, 5, (N, N)).astype(np.float32)
+    want = REF.run_matmul(B, A, hp)
+    np.testing.assert_array_equal(want, B @ A)
+    np.testing.assert_array_equal(REF.run_matmul(B, A, o), want)
+    np.testing.assert_array_equal(np.asarray(JAX.run_matmul(B, A, o)), want)
+
+
+# ------------------------------------------------- device-side scatter/gather
+def test_jax_block_scatter_gather_round_trip():
+    g = (2, 2)
+    N = 4 * 3
+    B = np.random.default_rng(6).standard_normal((N, N)).astype(np.float32)
+    blocks = opt.jax_scatter_blocks(B, g)
+    np.testing.assert_array_equal(
+        np.asarray(blocks), mm.scatter_blocks(mm.MatmulGrid(*g), B))
+    np.testing.assert_array_equal(np.asarray(opt.jax_gather_blocks(blocks, g)), B)
+
+
+# ------------------------------------------------- pipelined §3 (overlap)
+def test_pipelined_alltoall_schedule_stamps_and_replay():
+    """`pipelined_schedule` stamps Schedule-1 launch offsets (with the
+    measured minimal delays of ``round_starts``) onto the rounds; lowering
+    keeps them; replay in any stage order is bit-exact (all-to-all stages
+    read only the immutable input)."""
+    p = LAYOUT.da_params
+    sched = a2a.pipelined_schedule(p, offset=1)
+    starts, delays, makespan = a2a.round_starts(p, 1)
+    rep = a2a.pipeline(p, 1)
+    assert (rep.delays, rep.total_steps) == (delays, makespan)
+    assert [r.meta["start_step"] for r in sched.rounds] == starts
+
+    prog = lowering.lower(sched)
+    assert sorted({s.start_step for s in prog.stages}) == sorted(set(starts))
+    # pipelined launch order is a genuine compaction vs barrier replay
+    assert prog.max_start_step + 1 < sum(r.num_steps for r in sched.rounds)
+
+    n = prog.n
+    x = np.random.default_rng(7).standard_normal((n, n, 2)).astype(np.float32)
+    want = x.transpose(1, 0, 2)
+    np.testing.assert_array_equal(REF.run_alltoall(x, prog), want)
+    np.testing.assert_array_equal(REF.run_alltoall(x, opt.optimize(prog)), want)
