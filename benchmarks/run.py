@@ -269,6 +269,67 @@ def bench_emulation_rewrite(log=print):
         log(f"emulation_rewrite,path=replay_rewritten,{tag},us_per_call={us:.0f}")
 
 
+def bench_concurrent_guests(log=print):
+    """Multi-tenant makespan: two disjoint D3(2,2) guests on one D3(4,4)
+    host (``runtime.combine``) vs time-multiplexing them.
+
+      * ``solo_sum`` — the host without a combinator: replay each guest's
+        rewritten program in turn (Σ T_i rounds, two replays);
+      * ``combined`` — ONE replay of the combined program (max T_i rounds;
+        same-stamp perms packed into single partial permutations);
+      * ``combined_fused`` — the combined program through ``optimize()``
+        (the stacked-σ table now spans both guests).
+
+    Bit-exactness of combined vs solo per guest is asserted in-line, so a
+    regression shows up here as a failure rather than a fast wrong row.
+    """
+    from repro.core.emulation import disjoint_embeddings
+    from repro.core.topology import D3
+    from repro.dist import collectives as coll
+    from repro.dist.mesh import DeviceLayout
+    from repro.runtime import combine as cmb
+    from repro.runtime.backends.reference import NumpyReferenceBackend
+
+    ref = NumpyReferenceBackend()
+    host = D3(4, 4)
+    embs = disjoint_embeddings(host, [(2, 2), (2, 2)])
+    guest = DeviceLayout(D3(2, 2))
+    solos = [coll.alltoall_program(guest, e) for e in embs]
+    comb = coll.concurrent_program("alltoall", tuple(embs))
+    tag = "guests=2,guest=2x2,host=4x4"
+
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal((guest.n, guest.n, 16)).astype(np.float32)
+          for _ in embs]
+    hosts_solo = [cmb.scatter_guests([x], [e], axes=(0, 1))
+                  for x, e in zip(xs, embs)]
+    xh = cmb.scatter_guests(xs, embs, axes=(0, 1))
+
+    def solo_sum():
+        return [ref.run_alltoall(h, p) for h, p in zip(hosts_solo, solos)]
+
+    outs, us = _timed(solo_sum)
+    rounds_sum = sum(p.num_rounds for p in solos)
+    log(f"concurrent_guests,path=solo_sum,{tag},rounds={rounds_sum},us_per_call={us:.0f}")
+
+    out, us = _timed(lambda: ref.run_alltoall(xh, comb))
+    log(f"concurrent_guests,path=combined,{tag},rounds={comb.num_rounds},us_per_call={us:.0f}")
+    assert comb.num_rounds < rounds_sum  # the makespan win, in rounds
+    for gi, (e, solo_out) in enumerate(zip(embs, outs)):
+        np.testing.assert_array_equal(
+            cmb.extract_guest(out, e, axes=(0, 1)),
+            cmb.extract_guest(solo_out, e, axes=(0, 1)),
+        )
+
+    from repro.runtime.optimize import optimize
+
+    opt = optimize(comb)
+    fused, us = _timed(lambda: ref.run_alltoall(xh, opt))
+    np.testing.assert_array_equal(fused, out)
+    log(f"concurrent_guests,path=combined_fused,{tag},rounds={comb.num_rounds},"
+        f"fused_ops={opt.num_fused_ops},us_per_call={us:.0f}")
+
+
 def bench_core_micro(log=print):
     """Schedule-generation throughput (rounds/s) — the control-plane cost
     of the paper's algorithms at pod scale (D3(4,8) = 256 chips)."""
@@ -392,6 +453,8 @@ def main(argv=None) -> None:
     bench_optimizer(log)
     print("# ---- emulation rewrite (guest-on-host vs native lowering)")
     bench_emulation_rewrite(log)
+    print("# ---- concurrent guests (combined multiplex vs time-multiplex)")
+    bench_concurrent_guests(log)
     bench_core_micro(log)
     bench_kernels(log)
     bench_train_smoke(log)

@@ -25,6 +25,15 @@ offset 1 conflicts on the Z stage (paper's diagram), so trees chain in
 PAIRS — 2 waves of M broadcasts every 6 hops — total cost 3X/M router
 hops, vs X hops for the (single) depth-3 tree pipeline: the M-tree
 schedule wins by M/3.
+
+Contract owed to the paper — §5. Round count: one depth-3 tree spans all
+n routers in 3 hop steps (an M-broadcast in 5, delegation included);
+``pipelined_m_broadcast_schedule`` chains wave pairs so X broadcasts cost
+3X/M rounds. Conflict-freedom invariant: the M depth-4 trees are
+edge-disjoint in the DIRECTED sense (full-duplex Z links), so each wave's
+hops — and, after pair-chaining, the overlapped waves — replay through
+``core.simulator.verify`` with zero conflicts (asserted in
+tests/test_core_broadcast.py).
 """
 
 from __future__ import annotations

@@ -15,6 +15,18 @@ C × P × P router set exists and REWRITES the already-lowered D3(J, L)
 programs onto the survivors through ``Embedding.device_map`` (the
 program-to-program pass in ``runtime.rewrite``) — recovery never re-derives
 schedules. See train/fault_tolerance.py.
+
+It is also the *multi-tenancy* mechanism: because a C × P × P image is
+closed under every port the guest uses, two embeddings with disjoint
+images occupy disjoint routers AND disjoint links, so their rewritten
+programs can interleave on one host with zero conflicts
+(``runtime.combine``). ``disjoint_embeddings`` packs a list of guest
+shapes into such pairwise-disjoint images.
+
+Contract owed to the paper: Property 2 (§1/§6) — D3(K,M) emulates every
+D3(J,L) with J ≤ K, L ≤ M at dilation 1, so round counts and
+conflict-freedom of all four algorithms transfer verbatim from guest to
+host; ``Embedding.verify`` asserts the dilation-1 property link by link.
 """
 
 from __future__ import annotations
@@ -115,6 +127,46 @@ def embed(host: D3, J: int, L: int, c_set=None, p_set=None) -> Embedding:
     emb = Embedding(host, D3(J, L), c_set, p_set)
     emb.verify()
     return emb
+
+
+def disjoint_embeddings(host: D3, guest_shapes) -> tuple[Embedding, ...]:
+    """Pack guest shapes [(J, L), ...] into pairwise-DISJOINT Property-2
+    embeddings of ``host`` — the enumerator behind concurrent guests
+    (``runtime.combine``).
+
+    Disjointness needs only ONE axis to be partitioned, because an image
+    is the product set C × P × P: guests on disjoint cabinet sets never
+    share a router (whatever their position sets), and likewise for
+    disjoint position sets. We try the cabinet regime first (Σ J ≤ K —
+    each guest keeps all M positions available, mirroring
+    ``largest_embeddable``'s tie-break toward whole drawers), then the
+    position regime (Σ L ≤ M), and raise when neither fits. Every
+    returned embedding is dilation-1-verified.
+    """
+    shapes = [(int(J), int(L)) for J, L in guest_shapes]
+    if not shapes:
+        raise ValueError("disjoint_embeddings() needs at least one guest shape")
+    for J, L in shapes:
+        if J > host.K or L > host.M:
+            raise ValueError(
+                f"guest D3({J},{L}) does not fit host D3({host.K},{host.M})"
+            )
+    if sum(J for J, _ in shapes) <= host.K:
+        out, c0 = [], 0
+        for J, L in shapes:
+            out.append(embed(host, J, L, c_set=range(c0, c0 + J)))
+            c0 += J
+        return tuple(out)
+    if sum(L for _, L in shapes) <= host.M:
+        out, p0 = [], 0
+        for J, L in shapes:
+            out.append(embed(host, J, L, p_set=range(p0, p0 + L)))
+            p0 += L
+        return tuple(out)
+    raise ValueError(
+        f"guest shapes {shapes} do not pack disjointly into "
+        f"D3({host.K},{host.M}): need Σ J ≤ {host.K} or Σ L ≤ {host.M}"
+    )
 
 
 def largest_embeddable(host: D3, dead: set[Router]) -> tuple[int, int, tuple, tuple]:

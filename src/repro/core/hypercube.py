@@ -20,6 +20,14 @@ With the synchronized header (§5) all three become uniform 4-step paths:
 Ascend–descend algorithms (all-reduce, FFT, bitonic steps) traverse the
 k+2m dimensions in order; the emulation costs Σ dilations = 2(k+2m) hops,
 i.e. 2× the hypercube — the paper's headline factor-2 claim.
+
+Contract owed to the paper — §4, Theorem 4. Round count:
+``allreduce_schedule(sbh)`` emits k+2m dimension-exchange rounds whose
+emulated hop total is at most 2(k+2m) (``hypercube_cost``, dilation ≤ 3
+per dimension, ≤ 2 on average). Conflict-freedom invariant: within each
+dimension round every node pair exchanges along its emulation path with
+zero directed-link conflicts — ``core.simulator.verify`` must agree
+(asserted in tests/test_core_hypercube.py and test_schedule_ir.py).
 """
 
 from __future__ import annotations

@@ -38,6 +38,16 @@ matrix), each 4 network hops — Theorem 1. For n×n with X = n/KM, every
 router holds X×X blocks and each round moves X-vectors; n²/KM rounds —
 Theorem 2 (the X×X block product is the off-network compute, realized in
 the JAX layer by the Pallas block_matmul kernel).
+
+Contract owed to the paper — §2, Theorems 1 and 2. Round count:
+``schedule(g)`` emits KM rounds (one per row (s, u) of the left matrix),
+each 4 network hops + 2 off-and-ons; ``rounds_for(g, n)`` = n²/KM for
+X-blocked operands. Conflict-freedom invariant: every round's
+juxtaposition and mirrored-accumulation hops occupy pairwise-distinct
+directed links of D3(K², M) — ``core.simulator.verify`` must report zero
+conflicts (asserted in tests/test_core_matmul.py and, per Property 2,
+preserved verbatim under every ``runtime.rewrite`` / ``runtime.combine``
+relabeling).
 """
 
 from __future__ import annotations

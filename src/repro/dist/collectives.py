@@ -27,6 +27,14 @@ The cached ``*_program`` getters take ``optimized=True`` to return the
 fusion itself is memoized per program). Whole-array callers hand those to
 any backend's ``run_*``; the per-shard ``dragonfly_*`` entry points replay
 stages and therefore take ordinary programs.
+
+Multi-tenancy: ``concurrent_program(kind, embeddings)`` merges the guest
+programs of N pairwise-disjoint embeddings (``core.emulation.
+disjoint_embeddings``) into ONE host program through ``runtime.combine``,
+so N tenants' collectives run in max(T_i) rounds instead of Σ T_i;
+``concurrent_programs`` builds the whole suite at once. Per-guest inputs
+and results move through ``runtime.combine.scatter_guests`` /
+``gather_guests``.
 """
 
 from __future__ import annotations
@@ -114,6 +122,86 @@ def matmul_program(
     g = mm.MatmulGrid(K, M)
     prog = _emulated(lowering.lower(mm.schedule(g)), g.topo, embedding)
     return optimize(prog) if optimized else prog
+
+
+# -------------------------------------------------- concurrent guests
+@functools.lru_cache(maxsize=None)
+def concurrent_program(
+    kind: str, embeddings: tuple[Embedding, ...],
+    *, roots: tuple[int, ...] | None = None, optimized: bool = False,
+) -> CollectiveProgram:
+    """One combined host program multiplexing every embedding's guest
+    ``kind`` collective (``runtime.combine.combine`` of the cached
+    per-guest rewrites). ``roots`` gives each broadcast guest its own
+    root (guest device ids, default 0). ``optimized=True`` returns the
+    fused-table form — the stacked-σ tables then span all guests."""
+    from repro.runtime.combine import combine
+
+    if roots is not None and len(roots) != len(embeddings):
+        raise ValueError(f"{len(roots)} roots for {len(embeddings)} guests")
+    guests: list[CollectiveProgram] = []
+    for gi, emb in enumerate(embeddings):
+        layout = DeviceLayout(emb.guest)
+        if kind == "alltoall":
+            guests.append(alltoall_program(layout, emb))
+        elif kind == "allreduce":
+            guests.append(allreduce_program(layout, emb))
+        elif kind == "broadcast":
+            root = roots[gi] if roots is not None else 0
+            guests.append(broadcast_program(layout, root, emb))
+        elif kind == "matmul":
+            k = int(round(emb.guest.K ** 0.5))
+            if k * k != emb.guest.K:
+                raise ValueError(
+                    f"guest {gi} D3({emb.guest.K},{emb.guest.M}) is not a "
+                    "§2 grid (K must be a perfect square)"
+                )
+            guests.append(matmul_program(k, emb.guest.M, emb))
+        else:
+            raise ValueError(f"unknown program kind {kind!r}")
+    prog = combine(guests)
+    return optimize(prog) if optimized else prog
+
+
+def _kind_supported(kind: str, emb: Embedding) -> bool:
+    """Structural capability check: can this guest SHAPE emit ``kind``?
+    (Mirrors the skips in ``train.fault_tolerance.lower_layout_programs``;
+    kept structural so genuine errors — overlapping images, mismatched
+    hosts — still propagate out of ``concurrent_programs``.)"""
+    if kind == "allreduce":
+        sbh = DeviceLayout(emb.guest).sbh
+        return sbh is not None and sbh.dims > 0  # no cube on 1 router
+    if kind == "matmul":
+        k = int(round(emb.guest.K ** 0.5))
+        return k * k == emb.guest.K
+    return kind in ("alltoall", "broadcast")
+
+
+def concurrent_programs(
+    embeddings: tuple[Embedding, ...], kinds=("alltoall", "allreduce",
+                                              "broadcast"),
+    *, roots=None, optimized: bool = False,
+) -> dict[str, CollectiveProgram]:
+    """The combined-program suite for one tenant set: {kind: program} for
+    every requested kind all guest SHAPES support (e.g. allreduce off
+    powers of two is skipped). Anything else — overlapping images,
+    mismatched hosts, bad roots — raises rather than thinning the suite."""
+    if roots is not None and len(roots) != len(embeddings):
+        raise ValueError(f"{len(roots)} roots for {len(embeddings)} guests")
+    out: dict[str, CollectiveProgram] = {}
+    for kind in kinds:
+        if not all(_kind_supported(kind, e) for e in embeddings):
+            continue
+        if kind == "matmul" and len({e.guest for e in embeddings}) > 1:
+            # individually capable but differently-shaped guests cannot
+            # share one local-contract skeleton — skip, don't crash
+            continue
+        out[kind] = concurrent_program(
+            kind, tuple(embeddings),
+            roots=None if roots is None else tuple(roots),
+            optimized=optimized,
+        )
+    return out
 
 
 # ------------------------------------------------------------- collectives

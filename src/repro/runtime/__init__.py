@@ -66,6 +66,37 @@ guest-ordered host image. The pass guarantees:
     guest, c_set, p_set, program) — so repeated failover re-lowers reuse
     the built host index arrays instead of rebuilding them in jit traces.
 
+Concurrent-guest guarantees (``combine.combine(programs)``)
+-----------------------------------------------------------
+N rewritten guest programs with pairwise-disjoint ``active_devices``
+images merge into ONE host program (multi-tenant serving of disjoint
+D3(J,L) workloads on one mesh). What ``combine`` adds to the contract:
+
+  * the combined program is an ordinary emulated program —
+    ``active_devices`` is the guests' images concatenated in argument
+    order — so every conforming backend replays it with NO new code: the
+    idle-pass-through rules above already cover it;
+  * stages from different guests sharing one ``(round_index, step,
+    start_step)`` stamp are PACKED into a single partial stage (disjoint
+    ``Perm``s become one partial permutation — one ppermute moves every
+    guest's chunk), so the combined makespan is max(T_i) rounds, not Σ T_i;
+  * per-guest isolation: a guest's stages only name its own devices, so
+    each guest's slots carry bit-for-bit its solo (un-combined) result —
+    any replay order preserving each guest's own stage order is exact;
+  * conflicts are re-checked, not assumed: ``combine`` re-walks every
+    synchronous step across guests (one packet per directed link; only
+    ``ReduceCombine`` destinations repeat) and raises a structured
+    ``GuestConflictError`` with the offending (step, link) — and
+    ``combine.combine_schedules`` merges the guests' host-graph Schedule
+    views so ``core.simulator.verify`` re-proves conflict-freedom on the
+    literal host links;
+  * matmul guests must share one local-contract skeleton (same grid
+    shape/rounds) because ``load_b``/``mul_a``/``promote`` act on every
+    device; combined matmul programs replay at the blocks level;
+  * ``optimize`` fuses combined programs like any other: the stacked-σ
+    exchange table spans all guests, so the fused replay is still one
+    batched op per step group.
+
 Optimizer pass guarantees (``optimize.optimize(program)``)
 ----------------------------------------------------------
 The performance layer between lowering and execution: ``optimize`` fuses
@@ -109,4 +140,12 @@ bit-for-bit; interpret mode is a correctness vehicle, not a performance
 one — see ``backends/pallas_fused.py`` for the caveats.
 """
 
-from repro.runtime import backends, compat, lowering, optimize, program, rewrite  # noqa: F401
+from repro.runtime import (  # noqa: F401
+    backends,
+    combine,
+    compat,
+    lowering,
+    optimize,
+    program,
+    rewrite,
+)

@@ -40,27 +40,57 @@ Emulated (guest-on-host) programs are NOT a separate backend: the
 ``runtime.rewrite.emulate`` pass produces an ordinary ``CollectiveProgram``
 with ``active_devices`` set, and every backend replays it under the
 idle-pass-through rules of the package contract (``runtime/__init__.py``).
+The same holds for COMBINED multi-guest programs (``runtime.combine``):
+their ``active_devices`` is the concatenation of the guests' images, and
+a conforming backend replays them unchanged.
 
 Future backends (NCCL-style send/recv lists) plug in as additional modules
-here.
+here: add a loader to ``_REGISTRY`` and it shows up in
+``available_backends()`` / ``get_backend``.
 """
 
 from __future__ import annotations
 
 
+def _load_jax_ppermute():
+    from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
+
+    return JaxPpermuteBackend
+
+
+def _load_reference():
+    from repro.runtime.backends.reference import NumpyReferenceBackend
+
+    return NumpyReferenceBackend
+
+
+def _load_pallas_fused():
+    from repro.runtime.backends.pallas_fused import PallasFusedBackend
+
+    return PallasFusedBackend
+
+
+#: canonical name -> lazy class loader (lazy so the reference backend never
+#: pulls in jax); aliases below map user-facing shorthands onto it.
+_REGISTRY = {
+    "jax_ppermute": _load_jax_ppermute,
+    "reference": _load_reference,
+    "pallas_fused": _load_pallas_fused,
+}
+
+_ALIASES = {"jax": "jax_ppermute", "numpy": "reference", "pallas": "pallas_fused"}
+
+
+def available_backends() -> tuple[str, ...]:
+    """Canonical names of every registered backend, registration order."""
+    return tuple(_REGISTRY)
+
+
 def get_backend(name: str = "jax_ppermute", **kwargs):
-    """Instantiate a backend by name (imports lazily so the reference
-    backend never pulls in jax)."""
-    if name in ("jax", "jax_ppermute"):
-        from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
-
-        return JaxPpermuteBackend(**kwargs)
-    if name in ("reference", "numpy"):
-        from repro.runtime.backends.reference import NumpyReferenceBackend
-
-        return NumpyReferenceBackend(**kwargs)
-    if name in ("pallas", "pallas_fused"):
-        from repro.runtime.backends.pallas_fused import PallasFusedBackend
-
-        return PallasFusedBackend(**kwargs)
-    raise ValueError(f"unknown backend {name!r}")
+    """Instantiate a backend by canonical name or alias."""
+    loader = _REGISTRY.get(_ALIASES.get(name, name))
+    if loader is None:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {', '.join(_REGISTRY)}"
+        )
+    return loader()(**kwargs)

@@ -10,6 +10,13 @@
   + relabel — cheap enough to run inside the failover window, and cached
   (``emulate`` memoizes per (program, embedding)) so repeated failovers
   onto the same survivor set are free.
+* Multi-tenant failure handling: ``MultiTenantCluster`` runs N disjoint
+  guests on one host via the ``runtime.combine`` combinator. When chips
+  die, only the tenants whose images were hit are EVICTED; the survivors'
+  already-rewritten programs are RE-COMBINED (``plan_eviction``) — lookup
+  + relabel + merge, every step memoized, zero re-derivation and zero
+  re-lowering — so the unaffected tenants keep their schedules, stamps
+  and bits while the failed tenant drains.
 * Straggler mitigation: deadline-based microbatch accounting — rounds are
   deterministic (the paper's conflict-free schedules have no stochastic
   congestion), so a late participant is detected by round index; the
@@ -41,10 +48,13 @@ class UnpreparedShapeError(LookupError):
 class LoweredSuite:
     """The derive-once artifacts for one guest shape: the Schedule IRs (for
     host-graph verification via ``emulate_schedule``) and their lowered
-    ``CollectiveProgram``s (for execution via ``emulate``)."""
+    ``CollectiveProgram``s (for execution via ``emulate``). ``root`` is the
+    guest broadcast root the suite was derived with — the shape library
+    refuses to serve a cached suite under a different root."""
 
     schedules: dict[str, Schedule]
     programs: dict[str, CollectiveProgram]
+    root: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,7 +97,9 @@ def lower_layout_programs(layout: DeviceLayout, *, root: int = 0) -> LoweredSuit
         schedules["alltoall"] = a2a.schedule(layout.da_params, topo)
     except (ValueError, AssertionError):
         pass
-    if layout.sbh is not None:
+    if layout.sbh is not None and layout.sbh.dims > 0:
+        # dims == 0 is the degenerate single-router D3(1,1) guest: its
+        # "hypercube" has no dimensions and would lower to an empty program
         schedules["allreduce"] = hc.allreduce_schedule(layout.sbh)
     try:
         schedules["broadcast"] = bc.depth3_schedule(topo, topo.id_router(root))
@@ -97,27 +109,45 @@ def lower_layout_programs(layout: DeviceLayout, *, root: int = 0) -> LoweredSuit
     if k * k == topo.K:
         schedules["matmul"] = mm.schedule(mm.MatmulGrid(k, topo.M))
     programs = {kind: lowering.lower(s) for kind, s in schedules.items()}
-    return LoweredSuite(schedules=schedules, programs=programs)
+    return LoweredSuite(schedules=schedules, programs=programs, root=root)
 
 
 @dataclasses.dataclass
-class ClusterState:
+class _HostState:
+    """Shared failure bookkeeping + derive-once program library: the host
+    layout, the dead-router set, and the guest-shape suite cache that both
+    the single-workload ``ClusterState`` and the multi-tenant cluster
+    maintain identically."""
+
     layout: DeviceLayout
     dead: set = dataclasses.field(default_factory=set)
-    #: guest shape (J, L) -> derive-once suite; filled by prepare_*.
+    #: guest shape (J, L) -> derive-once suite; filled by prepare_shape.
     library: dict = dataclasses.field(default_factory=dict)
 
-    def fail(self, device_index: int):
+    def fail(self, device_index: int) -> None:
         self.dead.add(self.layout.topo.id_router(device_index))
 
-    # ----------------------------------------------------- preparation time
     def prepare_shape(self, J: int, L: int, *, root: int = 0) -> LoweredSuite:
-        """Derive + lower the suite for guest D3(J, L) (idempotent)."""
+        """Derive + lower the suite for guest D3(J, L) (idempotent) — the
+        only recovery-adjacent call into the core derivations. A cache hit
+        under a DIFFERENT broadcast root is refused rather than silently
+        serving the wrong root's programs."""
         key = (J, L)
-        if key not in self.library:
-            self.library[key] = lower_layout_programs(DeviceLayout(D3(J, L)), root=root)
-        return self.library[key]
+        suite = self.library.get(key)
+        if suite is None:
+            suite = self.library[key] = lower_layout_programs(
+                DeviceLayout(D3(J, L)), root=root)
+        elif suite.root != root:
+            raise ValueError(
+                f"suite for D3({J},{L}) was prepared with broadcast root "
+                f"{suite.root}; re-preparing with root {root} would serve "
+                "mixed roots — use a separate library"
+            )
+        return suite
 
+
+@dataclasses.dataclass
+class ClusterState(_HostState):
     def fallback_shapes(self) -> list[tuple[int, int]]:
         """Every shape ``largest_embeddable`` can return on this pod: the
         cabinet-drop ladder (j, M) and the position-drop ladder (K, l),
@@ -157,6 +187,120 @@ class ClusterState:
             index_map=index_map,
             programs=programs,
             schedules=schedules,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Concurrent guests: N tenants on one host, eviction by re-combination.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TenantPlan:
+    """One eviction step's output: who stays, who goes, and the combined
+    programs the survivors keep running — produced WITHOUT re-deriving or
+    re-lowering anything (``emulate`` and ``combine`` are both memoized,
+    so repeat failovers onto the same tenant set are cache hits)."""
+
+    surviving: tuple[int, ...]            # tenant ids kept, admission order
+    evicted: tuple[int, ...]
+    embeddings: tuple[Embedding, ...]     # survivors' (unchanged) embeddings
+    programs: dict[str, CollectiveProgram]  # combined, over the survivors
+    index_maps: tuple[dict[int, int], ...]  # per survivor: guest id -> host id
+
+
+@dataclasses.dataclass
+class MultiTenantCluster(_HostState):
+    """N disjoint D3(J,L) guests time-sharing NOTHING: their rewritten
+    programs interleave on one host mesh (``runtime.combine``).
+
+    ``admit`` validates image-disjointness against the sitting tenants and
+    derives + lowers the guest's suite ONCE (the only time core
+    derivations run); ``fail`` marks host chips dead; ``plan_eviction``
+    evicts exactly the tenants whose images were hit and re-combines the
+    survivors' programs — the other guests keep running with their
+    schedules, stamps and bits unchanged. Failure bookkeeping and the
+    shape library are the inherited ``_HostState``.
+    """
+
+    tenants: list = dataclasses.field(default_factory=list)  # Embeddings
+
+    # ------------------------------------------------------ admission time
+    def admit(self, embedding: Embedding) -> int:
+        """Seat a tenant: reject image overlaps, prepare its program suite
+        (derive + lower, idempotent per shape). Returns the tenant id."""
+        if embedding.host != self.layout.topo:
+            raise ValueError(
+                f"tenant embeds into D3({embedding.host.K},{embedding.host.M})"
+                f", host is D3({self.layout.topo.K},{self.layout.topo.M})"
+            )
+        image = set(int(h) for h in embedding.device_map)
+        dead_ids = {self.layout.topo.router_id(r) for r in self.dead}
+        if image & dead_ids:
+            raise ValueError(
+                f"tenant image includes failed host devices "
+                f"{sorted(image & dead_ids)[:4]}"
+            )
+        for tid, sitting in enumerate(self.tenants):
+            clash = image & {int(h) for h in sitting.device_map}
+            if clash:
+                raise ValueError(
+                    f"tenant overlaps tenant {tid} on host devices "
+                    f"{sorted(clash)[:4]}"
+                )
+        self.prepare_shape(embedding.guest.K, embedding.guest.M)
+        self.tenants.append(embedding)
+        return len(self.tenants) - 1
+
+    # --------------------------------------------------------- failure time
+    def plan_eviction(self, kinds=None) -> TenantPlan:
+        """Evict the tenants whose images contain a dead chip; re-combine
+        the survivors (rewrite-only: cached ``emulate`` + cached
+        ``combine``, no derivations, no lowering). ``kinds`` defaults to
+        every kind all survivors' suites support.
+
+        Evicted tenants are UNSEATED: their embeddings leave
+        ``self.tenants``, so a replacement tenant can later ``admit`` onto
+        the freed healthy routers. The returned plan reports survivor and
+        evictee ids as positions at call time.
+        """
+        from repro.runtime.combine import GuestConflictError, combine
+
+        dead_ids = {self.layout.topo.router_id(r) for r in self.dead}
+        surviving, evicted = [], []
+        for tid, emb in enumerate(self.tenants):
+            hit = dead_ids & {int(h) for h in emb.device_map}
+            (evicted if hit else surviving).append(tid)
+        if not surviving:
+            raise RuntimeError("no tenant survives the failure set")
+        embs = tuple(self.tenants[t] for t in surviving)
+        self.tenants = list(embs)  # unseat the evicted tenants
+        suites = [
+            self.library[(e.guest.K, e.guest.M)] for e in embs
+        ]
+        supported = set(suites[0].programs)
+        for s in suites[1:]:
+            supported &= set(s.programs)
+        # explicit kinds intersect with what every survivor supports, the
+        # same skip-unsupported semantics as lower_layout_programs
+        kinds = supported if kinds is None else set(kinds) & supported
+        programs: dict[str, CollectiveProgram] = {}
+        for kind in sorted(kinds):
+            try:
+                programs[kind] = combine(
+                    [emulate(s.programs[kind], e) for s, e in zip(suites, embs)]
+                )
+            except GuestConflictError:
+                if kind == "matmul":  # shape-mixed tenants can't share the
+                    continue          # local-contract skeleton — skip kind
+                raise
+        return TenantPlan(
+            surviving=tuple(surviving),
+            evicted=tuple(evicted),
+            embeddings=embs,
+            programs=programs,
+            index_maps=tuple(
+                {g: int(h) for g, h in enumerate(e.device_map)} for e in embs
+            ),
         )
 
 
