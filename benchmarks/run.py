@@ -5,6 +5,12 @@ benchmarks of the runtime layers. Prints ``name,...`` CSV-ish lines;
 across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--json BENCH_2026-07-30.json]
+
+``--compare OLD.json NEW.json`` diffs two such trajectories instead of
+benchmarking: shared records whose us_per_call grew beyond ``--tolerance``
+(default 0.5 = +50%, CPU CI timings are noisy) print as REGRESSION lines.
+Warn-only by default; ``--strict`` exits 1 when regressions exist (the CI
+bench job runs it warn-only against the committed baseline).
 """
 
 from __future__ import annotations
@@ -394,6 +400,127 @@ def bench_train_smoke(log=print):
     log(f"train_step_smoke,arch=tinyllama-smoke,B=4,S=32,us_per_call={us:.0f},loss={float(m['loss']):.3f}")
 
 
+def bench_autotuner(log=print):
+    """Price-driven autotuner (runtime/autotune.py): the decision table the
+    tuner produces for a spread of call-site keys, plus fresh per-strategy
+    timings with their measured-vs-analytic error.
+
+    Rows:
+      * ``autotuner_decision`` — one per key: chosen strategy, decision
+        source (measured / cache / analytic), the schedule's priced rounds
+        and hops, predicted µs;
+      * ``autotuner_strategy`` — one per runnable candidate: fresh measured
+        µs, the analytic seed price, and err_ratio = measured / analytic
+        (how well the seed model ranks without calibration).
+
+    The acceptance bound is asserted in-line: the chosen strategy's fresh
+    timing is never slower than the worst fixed candidate (with 10% timer
+    slack), so a mis-ranking tuner fails the bench instead of logging a
+    plausible-looking row. Decisions use the default on-disk cache
+    (benchmarks/autotune_cache.json) — the CI artifact next to the BENCH
+    trajectory."""
+    from repro.runtime import autotune as at
+
+    tuner = at.Autotuner()
+    sites = [
+        ("alltoall", 16, 256, "host", None),
+        ("alltoall", 16, 256, "global", None),
+        ("allreduce", 16, 256, "global", None),
+        ("broadcast", 16, 256, "global", None),
+        ("alltoall", 16, 256, "shard", None),
+        ("alltoall", 16, 1 << 16, "global", None),  # large messages rerank
+        ("matmul", 16, 16 * 16 * 4, "global", (2, 2)),
+    ]
+    for kind, n, nbytes, site, grid in sites:
+        layout = at.layout_for(n)
+        dec = tuner.decide(kind, layout, nbytes, site=site, grid=grid)
+        log(
+            f"autotuner_decision,kind={kind},site={site},n={n},b={dec.key.nbytes},"
+            f"strategy={dec.strategy},source={dec.source},rounds={dec.rounds},"
+            f"hops={dec.hops:.0f},us_per_call={dec.predicted_us:.0f}"
+        )
+        times: dict[str, float] = {}
+        for s in at.candidates(kind, site):
+            try:
+                fn = at._measure_closure(kind, site, s, layout, grid,
+                                         dec.key.nbytes, dec.key.dtype)
+            except Exception:
+                fn = None
+            if fn is None:
+                log(f"autotuner_strategy,kind={kind},site={site},n={n},"
+                    f"b={dec.key.nbytes},strategy={s},skipped=unrunnable_here")
+                continue
+            us = at._time_us(fn)
+            times[s] = us
+            err = us / max(dec.analytic_us.get(s, us), 1e-9)
+            log(
+                f"autotuner_strategy,kind={kind},site={site},n={n},"
+                f"b={dec.key.nbytes},strategy={s},chosen={int(s == dec.strategy)},"
+                f"analytic_us={dec.analytic_us.get(s, 0):.0f},err_ratio={err:.2f},"
+                f"us_per_call={us:.0f}"
+            )
+        if dec.strategy in times and len(times) > 1:
+            worst = max(times.values())
+            assert times[dec.strategy] <= worst * 1.10, (
+                f"tuner picked {dec.strategy} ({times[dec.strategy]:.0f}us) but the "
+                f"worst fixed strategy costs {worst:.0f}us — ranking inverted: {times}"
+            )
+    tuner.save()
+
+
+# ------------------------------------------------------- trajectory compare
+#: param keys excluded from record identity when diffing trajectories —
+#: they vary run to run (timing noise, cache state) without the record
+#: meaning a different measurement
+_VOLATILE_PARAMS = {"err_ratio", "loss", "source", "chosen", "analytic_us",
+                    "skipped", "hops"}
+
+
+def _record_key(rec: dict) -> str:
+    items = sorted(
+        (k, v) for k, v in rec.get("params", {}).items()
+        if k not in _VOLATILE_PARAMS
+    )
+    return rec["name"] + "|" + ",".join(f"{k}={v}" for k, v in items)
+
+
+def compare(old_path: str, new_path: str, tolerance: float = 0.5,
+            log=print) -> int:
+    """Diff two ``--json`` trajectories; returns the regression count.
+
+    A shared record regresses when its us_per_call grew beyond
+    ``1 + tolerance``; symmetric improvements and added/removed records are
+    reported informationally. Records without timings (skipped rows,
+    structural records) are ignored."""
+    with open(old_path) as f:
+        old = {_record_key(r): r for r in json.load(f)}
+    with open(new_path) as f:
+        new = {_record_key(r): r for r in json.load(f)}
+    shared = sorted(set(old) & set(new))
+    regressions = 0
+    for key in shared:
+        o, nrec = old[key], new[key]
+        if "us_per_call" not in o or "us_per_call" not in nrec:
+            continue
+        ou, nu = float(o["us_per_call"]), float(nrec["us_per_call"])
+        if ou <= 0:
+            continue
+        ratio = nu / ou
+        if ratio > 1 + tolerance:
+            regressions += 1
+            log(f"REGRESSION {key}: {ou:.0f}us -> {nu:.0f}us "
+                f"({ratio:.2f}x > {1 + tolerance:.2f}x tolerance)")
+        elif ratio < 1 / (1 + tolerance):
+            log(f"improved   {key}: {ou:.0f}us -> {nu:.0f}us ({ratio:.2f}x)")
+    for key in sorted(set(new) - set(old)):
+        log(f"added      {key}")
+    for key in sorted(set(old) - set(new)):
+        log(f"removed    {key}")
+    log(f"# compared {len(shared)} shared records; "
+        f"{regressions} regression(s) beyond +{tolerance:.0%}")
+    return regressions
+
+
 def _parse_record(line: str) -> dict | None:
     """``name,k=v,...`` -> {name, params, us_per_call?, rounds?}."""
     parts = line.strip().split(",")
@@ -422,7 +549,22 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write machine-readable records to PATH")
+    ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"), default=None,
+                    help="diff two --json trajectories instead of benchmarking")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="relative us_per_call growth before a shared record "
+                         "counts as a regression (default 0.5 = +50%%)")
+    ap.add_argument("--strict", action="store_true",
+                    help="with --compare: exit 1 when regressions exist "
+                         "(default is warn-only)")
     args = ap.parse_args(argv)
+
+    if args.compare:
+        n_reg = compare(*args.compare, tolerance=args.tolerance)
+        if args.strict and n_reg:
+            raise SystemExit(1)
+        return
+
     if args.json:  # fail fast before minutes of benchmarking
         with open(args.json, "a"):
             pass
@@ -455,6 +597,8 @@ def main(argv=None) -> None:
     bench_emulation_rewrite(log)
     print("# ---- concurrent guests (combined multiplex vs time-multiplex)")
     bench_concurrent_guests(log)
+    print("# ---- price-driven autotuner (decision table + strategy timings)")
+    bench_autotuner(log)
     bench_core_micro(log)
     bench_kernels(log)
     bench_train_smoke(log)

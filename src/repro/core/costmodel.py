@@ -122,5 +122,26 @@ def broadcast_m_tree(X: int, M: int) -> float:
 
 
 # ------------------------------- hardware-time helpers ---------------------
-def seconds(hops: float, t_w: float = 1.0e-6, t_s: float = 0.0) -> float:
-    return hops * t_w + t_s
+def seconds(
+    hops: float,
+    t_w: float = 1.0e-6,
+    t_s: float = 0.0,
+    *,
+    bytes_per_hop: float = 0.0,
+    bandwidth: float = 50e9,
+) -> float:
+    """Wall-clock estimate of ``hops`` network steps.
+
+    The paper prices in t_w units (one router hop per step); real links
+    also pay serialization time proportional to the message size, and the
+    crossover between strategies moves with it — so the autotuner needs
+    prices that SCALE with bytes. Each hop costs ``t_w`` (router latency)
+    plus ``bytes_per_hop / bandwidth`` (wire time; default 50 GB/s, the
+    TPU v5e ICI link), and the call pays ``t_s`` software startup once:
+
+        seconds = hops · (t_w + bytes_per_hop / bandwidth) + t_s
+
+    ``bytes_per_hop=0`` reproduces the original latency-only form.
+    """
+    per_hop = t_w + (bytes_per_hop / bandwidth if bytes_per_hop else 0.0)
+    return hops * per_hop + t_s

@@ -59,6 +59,20 @@ from repro.runtime.rewrite import emulate
 _DEFAULT_BACKEND = JaxPpermuteBackend()
 
 
+def _resolve_backend(backend):
+    """None -> the default ppermute backend; a string -> the registered
+    backend of that name (``"auto"`` routes each call through the
+    price-driven autotuner, ``runtime.autotune``); anything else is taken
+    to already be a backend instance."""
+    if backend is None:
+        return _DEFAULT_BACKEND
+    if isinstance(backend, str):
+        from repro.runtime.backends import get_backend
+
+        return get_backend(backend)
+    return backend
+
+
 def _emulated(prog: CollectiveProgram, guest: D3, embedding: Embedding | None):
     """Rewrite ``prog`` onto the embedding's host (no-op without one).
     ``emulate`` is itself lru-cached on (program, embedding), so the rewrite
@@ -218,7 +232,7 @@ def dragonfly_all_to_all(x, axis_name: str, layout: DeviceLayout, backend=None,
     out[j] = chunk from device j (the lax.all_to_all 0/0 layout). With an
     ``embedding``, ``layout`` is the guest and the exchange runs on the
     host mesh axis (n = host routers); idle devices pass zeros through."""
-    be = backend or _DEFAULT_BACKEND
+    be = _resolve_backend(backend)
     return be.alltoall(x, axis_name, alltoall_program(layout, embedding))
 
 
@@ -226,7 +240,7 @@ def dragonfly_all_reduce(x, axis_name: str, layout: DeviceLayout, backend=None,
                          embedding: Embedding | None = None):
     """§4 ascend all-reduce (sum) over the emulated hypercube; with an
     ``embedding``, guest-sized on the host mesh (idle devices unchanged)."""
-    be = backend or _DEFAULT_BACKEND
+    be = _resolve_backend(backend)
     return be.allreduce(x, axis_name, allreduce_program(layout, embedding))
 
 
@@ -234,7 +248,7 @@ def dragonfly_broadcast(x, axis_name: str, layout: DeviceLayout, root: int = 0,
                         backend=None, embedding: Embedding | None = None):
     """§5 depth-3 spanning-tree broadcast from GUEST device ``root`` (the
     rewrite maps it to its host device when an ``embedding`` is given)."""
-    be = backend or _DEFAULT_BACKEND
+    be = _resolve_backend(backend)
     return be.broadcast(x, axis_name, broadcast_program(layout, root, embedding))
 
 
@@ -254,5 +268,5 @@ def dragonfly_matmul(b_block, a_block, axis_name: str, grid: tuple[int, int],
     guest D3(K²,M) product runs on the host mesh axis: active devices hold
     the guest blocks at their ``active_devices`` slots, idle blocks are
     ignored and their output stays zero."""
-    be = backend or _DEFAULT_BACKEND
+    be = _resolve_backend(backend)
     return be.matmul(b_block, a_block, axis_name, matmul_program(*grid, embedding))

@@ -283,6 +283,15 @@ def analyze_cell(arch: str, shape_name: str, multi_pod: bool, force=False,
     from repro.dist import sharding as SH
     SH.set_active(rules, mesh)  # model-internal sharding constraints (MoE)
     n_chips = int(np.prod(mesh.devices.shape))
+
+    # what the price-driven autotuner would pick for this cell's MoE
+    # dispatch site (analytic mode: deterministic, nothing measured or
+    # written — the dry-run never times the 512 fake devices)
+    from repro.runtime import autotune
+    result["autotune"] = autotune.moe_site_report(
+        cfg, rules, n_tokens=shape.global_batch * shape.seq_len,
+        tuner=autotune.Autotuner(mode="analytic"),
+    )
     mb = MICROBATCHES.get(arch, 1) if shape.kind == "train" else 1
     if mb_override:
         mb = mb_override
@@ -412,7 +421,8 @@ def main(argv=None):
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--moe-collectives",
-                    choices=["xla", "dragonfly", "dragonfly_overlap"], default=None)
+                    choices=["xla", "dragonfly", "dragonfly_overlap", "auto"],
+                    default=None)
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--tag", default="")
     args = ap.parse_args(argv)

@@ -156,7 +156,11 @@ def moe_apply_ep(params, x, cfg):
     runtime/lowering.py, replayed by the jax_ppermute backend (via
     dist/collectives.py) — same payload, K·M²/s visible rounds (see
     EXPERIMENTS.md §Perf). ``dragonfly_overlap`` replays the same program
-    in start_step order so independent ppermutes overlap.
+    in start_step order so independent ppermutes overlap. ``auto`` asks the
+    price-driven autotuner (runtime/autotune.py) which of the three wins at
+    this site's key — D3 view of the axis, per-destination buffer bytes —
+    and runs that; the decision happens here in Python, BEFORE shard_map,
+    so the traced collective is whichever fixed path the tuner picked.
     """
     from repro.dist import sharding as SH
     from repro.runtime import compat
@@ -176,6 +180,24 @@ def moe_apply_ep(params, x, cfg):
     # and the expert compute is n_model-times redundant.
     b_axes = b_ax if isinstance(b_ax, tuple) else (b_ax,)
     tok_axes = (*b_axes, t_ax)
+
+    moe_coll = rules.moe_collectives
+    if moe_coll == "auto":
+        # resolve the strategy OUTSIDE shard_map (tuner runs real closures;
+        # it cannot measure inside a trace). Key: the dispatch/combine
+        # all-to-all over the model axis' D3 view at this config's
+        # per-destination buffer size, C_loc from the capacity bound.
+        from repro.runtime import autotune
+
+        t_loc = max(1, (B * S) // max(1, rules.data_axis_size * n_model))
+        c_loc = max(8, int(m.capacity_factor * t_loc * m.top_k / E))
+        c_loc = -(-c_loc // 8) * 8
+        chunk = E_loc * c_loc * d * jnp.dtype(x.dtype).itemsize
+        dec = autotune.get_autotuner().decide(
+            "alltoall", autotune.layout_for(n_model), chunk,
+            dtype=str(x.dtype), site="shard")
+        moe_coll = {"xla": "xla", "loop": "dragonfly",
+                    "overlap": "dragonfly_overlap"}[dec.strategy]
 
     def local_fn(xt, w_in, w_gate, w_out, router):
         T_loc = xt.shape[0]
@@ -199,14 +221,14 @@ def moe_apply_ep(params, x, cfg):
         # start_step order (cross-round ppermute overlap, hiding round
         # latency behind per-round compute); "xla" the fused op.
         buf = buf.reshape(n_model, E_loc, C_loc, d)
-        if rules.moe_collectives.startswith("dragonfly"):
+        if moe_coll.startswith("dragonfly"):
             from repro.dist.collectives import dragonfly_all_to_all
             from repro.dist.mesh import dragonfly_layout
             from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
 
             layout = dragonfly_layout(n_model)
             a2a_backend = JaxPpermuteBackend(
-                overlap=rules.moe_collectives == "dragonfly_overlap"
+                overlap=moe_coll == "dragonfly_overlap"
             )
             recv = dragonfly_all_to_all(buf, t_ax, layout, backend=a2a_backend)
         else:
@@ -218,7 +240,7 @@ def moe_apply_ep(params, x, cfg):
         y = jnp.einsum("ecf,efd->ecd", h, w_out)
         # ---- combine all-to-all
         y = y.reshape(E_loc, n_model, C_loc, d).transpose(1, 0, 2, 3)
-        if rules.moe_collectives.startswith("dragonfly"):
+        if moe_coll.startswith("dragonfly"):
             back = dragonfly_all_to_all(y, t_ax, layout, backend=a2a_backend)
         else:
             back = jax.lax.all_to_all(y, t_ax, split_axis=0, concat_axis=0)

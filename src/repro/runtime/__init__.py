@@ -128,8 +128,8 @@ is the hot path: constant-size HLO regardless of program length (compile
 time), one upload of stacked index tensors (trace time), one advanced-
 indexing pass per group (host replay).
 
-``backends.get_backend("jax_ppermute" | "reference" | "pallas_fused")``
-instantiates the built-ins: ppermutes on a JAX mesh (optionally
+``backends.get_backend("jax_ppermute" | "reference" | "pallas_fused" |
+"auto")`` instantiates the built-ins: ppermutes on a JAX mesh (optionally
 overlapped), a pure-NumPy host replay used for differential testing and
 device-free validation, and the Pallas-fused backend — optimized-table
 replay with Pallas kernels on the ReduceCombine rounds and the §2
@@ -138,9 +138,33 @@ replay with Pallas kernels on the ReduceCombine rounds and the §2
 ``interpret=True`` everywhere else, so CPU CI exercises the fused path
 bit-for-bit; interpret mode is a correctness vehicle, not a performance
 one — see ``backends/pallas_fused.py`` for the caveats.
+
+Autotuner guarantees (``autotune.Autotuner`` / the ``auto`` backend)
+---------------------------------------------------------------------
+The dispatcher that turns the three coexisting execution strategies into
+one fast default path. Per call site — keyed on ``(kind, D3 topology,
+bucketed message bytes, dtype, site)`` — it picks the cheapest of the
+strategies structurally available there (per-stage ``loop`` replay,
+``start_step``-ordered ``overlap``, fused ``optimize()`` tables, the
+``pallas_fused`` backend, or the plain ``xla`` collective), seeded by
+``core.costmodel`` analytic prices and calibrated by one-shot measured
+timings memoized in a schema-versioned on-disk cache. What it preserves:
+
+  * **bit-exactness is free** — every candidate strategy satisfies the
+    backend contract above, so switching strategies can never change a
+    result, only its latency; emulated (``active_devices``) programs
+    additionally exclude ``xla`` (the fused op would mix idle devices);
+  * **determinism** — a warm cache returns the recorded decision without
+    re-measurement; a corrupt or missing cache degrades to analytic
+    seeding without error;
+  * **escape hatches** — ``REPRO_AUTOTUNE=analytic`` (rank without
+    measuring), ``REPRO_AUTOTUNE=off`` (pre-autotuner defaults), or
+    ``REPRO_AUTOTUNE=<strategy>`` (pin one strategy) — the same knobs the
+    ``Autotuner`` constructor takes programmatically.
 """
 
 from repro.runtime import (  # noqa: F401
+    autotune,
     backends,
     combine,
     compat,

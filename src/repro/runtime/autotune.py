@@ -1,0 +1,585 @@
+"""Price-driven collective autotuner — pick the cheapest strategy per call
+site, seeded by the paper's analytic prices and calibrated by measurement.
+
+The paper prices every algorithm in rounds (Theorems 1–4, Schedules 1–3)
+and ``core.costmodel`` encodes those tables; PR 4 added three coexisting
+execution strategies for every lowered program (per-stage replay, fused
+``optimize()`` tables, Pallas kernels) plus the plain XLA collective the
+runtime replaces. Nothing *dispatched* on price until now: every call site
+hardcoded one strategy. The ``Autotuner`` closes that gap:
+
+  * a call site is keyed on ``(kind, K·M topology, message bytes, dtype,
+    site)`` — ``TuneKey``; message bytes are bucketed to the next power of
+    two so nearby shapes share one decision;
+  * the candidate strategies per site class are
+
+      - ``site="host"``   (NumPy whole-array callers):   loop | fused
+      - ``site="global"`` (device whole-array ``run_*``): loop | fused |
+        pallas_fused | xla
+      - ``site="shard"``  (inside a caller's shard_map, e.g. MoE
+        dispatch): xla | loop | overlap
+
+    where ``loop`` is the per-stage D3 schedule replay, ``overlap`` the
+    same program in ``start_step`` order, ``fused`` the ``optimize()``
+    table replay, ``pallas_fused`` the Pallas-kernel backend, and ``xla``
+    the fused XLA collective (``lax.all_to_all`` / ``psum``). Inside a
+    shard_map the fused-table form of an all-to-all IS the single fused
+    op, so ``xla`` is how "fused" manifests at shard sites;
+  * decisions are SEEDED by analytic prices — ``costmodel.price`` of the
+    emitted schedule turned into wall-clock by the bytes-aware
+    ``costmodel.seconds`` plus per-strategy software-overhead terms — and
+    then CALIBRATED by one-shot measured timings, memoized in an on-disk
+    JSON cache (``benchmarks/autotune_cache.json``, schema-versioned,
+    corrupt-tolerant: an unreadable cache falls back to analytic seeding
+    and is rewritten on the next measurement);
+  * escape hatches: ``REPRO_AUTOTUNE=analytic`` forces analytic-only
+    ranking (no measurement, no disk), ``REPRO_AUTOTUNE=off`` disables
+    tuning (every site gets its pre-autotuner default), and
+    ``REPRO_AUTOTUNE=<strategy>`` forces one strategy everywhere it is
+    structurally available. ``REPRO_AUTOTUNE_CACHE`` moves the cache file.
+    The ``Autotuner`` constructor takes the same knobs (``mode``,
+    ``force``, ``cache_path``) for programmatic control.
+
+Wired call sites: ``dist.collectives.dragonfly_*`` accept
+``backend="auto"``, ``runtime.backends.get_backend("auto")`` returns the
+:class:`AutoBackend` whole-array dispatcher, ``models.moe`` routes EP
+dispatch/combine through the tuner when ``moe_collectives="auto"``, and
+``serve.engine`` / ``launch.dryrun`` report the chosen strategy + priced
+rounds per config via :func:`moe_site_report`.
+
+Determinism: a warm cache always returns the recorded decision (no
+re-measurement), analytic ranking is pure arithmetic over the schedule,
+and measurement happens at most once per key per cache lifetime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import costmodel
+
+SCHEMA_VERSION = 1
+DEFAULT_CACHE = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "autotune_cache.json"
+
+KINDS = ("alltoall", "allreduce", "broadcast", "matmul")
+SITES = ("host", "global", "shard")
+STRATEGIES = ("loop", "overlap", "fused", "pallas_fused", "xla")
+
+#: analytic seed constants (calibration overrides these — they only need to
+#: produce a sane ranking before the first measurement lands in the cache)
+T_W = 1.0e-6          # per-hop router latency, the paper's t_w
+BANDWIDTH = 50e9      # per-link wire bandwidth (TPU v5e ICI)
+T_DISPATCH = 5.0e-6   # software overhead per replayed stage (loop paths)
+T_GROUP = 2.0e-6      # software overhead per fused table group
+T_KERNEL = 10.0e-6    # extra per-group cost of a Pallas kernel launch
+T_XLA = 20.0e-6       # fixed overhead of one fused XLA collective
+
+
+# ---------------------------------------------------------------------------
+# Keys and decisions
+# ---------------------------------------------------------------------------
+
+def bucket_bytes(nbytes: int) -> int:
+    """Round message bytes up to the next power of two (min 64) so nearby
+    shapes share one cache entry and the key space stays bounded."""
+    n = max(64, int(nbytes))
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneKey:
+    """One call site: what is being moved, over which topology, how big."""
+
+    kind: str      # alltoall | allreduce | broadcast | matmul
+    K: int         # D3(K, M) of the mesh axis (matmul: the grid's topo)
+    M: int
+    nbytes: int    # bucketed message bytes (per chunk / vector / block)
+    dtype: str
+    site: str      # host | global | shard
+
+    def __str__(self) -> str:
+        return f"{self.kind}|K{self.K}M{self.M}|b{self.nbytes}|{self.dtype}|{self.site}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """The tuner's answer for one key, with its full evidence trail."""
+
+    key: TuneKey
+    strategy: str
+    source: str                     # forced | off | cache | measured | analytic
+    rounds: int                     # priced schedule rounds (xla: 1)
+    hops: float                     # costmodel.price of the schedule, t_w units
+    analytic_us: dict[str, float]   # strategy -> analytic seed price
+    measured_us: dict[str, float]   # strategy -> measured (empty if analytic)
+
+    @property
+    def predicted_us(self) -> float:
+        got = self.measured_us.get(self.strategy)
+        return got if got is not None else self.analytic_us.get(self.strategy, 0.0)
+
+    def as_row(self) -> dict:
+        return {
+            "key": str(self.key), "strategy": self.strategy,
+            "source": self.source, "rounds": self.rounds, "hops": self.hops,
+            "predicted_us": round(self.predicted_us, 1),
+            "analytic_us": {k: round(v, 1) for k, v in self.analytic_us.items()},
+            "measured_us": {k: round(v, 1) for k, v in self.measured_us.items()},
+        }
+
+
+def _default_strategy(kind: str, site: str) -> str:
+    """What each call site did BEFORE the autotuner existed (mode='off')."""
+    return "xla" if site == "shard" else "loop"
+
+
+def candidates(kind: str, site: str, *, emulated: bool = False) -> tuple[str, ...]:
+    """Structurally available strategies for a (kind, site) class.
+
+    ``emulated`` (guest-on-host ``active_devices`` programs) drops ``xla``:
+    the fused op would mix idle devices into the result."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}")
+    if site == "host":
+        out: tuple[str, ...] = ("loop", "fused")
+    elif site == "global":
+        out = ("loop", "fused", "pallas_fused")
+        if kind in ("alltoall", "allreduce"):
+            out += ("xla",)
+    elif site == "shard":
+        out = ("loop", "overlap")
+        if kind != "matmul":
+            out = ("xla",) + out
+    else:
+        raise ValueError(f"unknown site {site!r}; expected one of {SITES}")
+    if emulated:
+        out = tuple(s for s in out if s != "xla")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Schedules / programs per kind (lazy dist imports — dist layers on runtime)
+# ---------------------------------------------------------------------------
+
+def _schedule(kind: str, layout, grid=None):
+    from repro.core import alltoall as a2a
+    from repro.core import broadcast as bc
+    from repro.core import hypercube as hc
+    from repro.core import matmul as mm
+
+    if kind == "alltoall":
+        return a2a.schedule(layout.da_params, layout.topo)
+    if kind == "allreduce":
+        if layout.sbh is None:
+            raise ValueError(f"D3({layout.topo.K},{layout.topo.M}) has no SBH")
+        return hc.allreduce_schedule(layout.sbh)
+    if kind == "broadcast":
+        return bc.depth3_schedule(layout.topo, layout.topo.id_router(0))
+    if kind == "matmul":
+        return mm.schedule(mm.MatmulGrid(*grid))
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def _program(kind: str, layout, grid=None):
+    from repro.dist import collectives as coll
+
+    if kind == "alltoall":
+        return coll.alltoall_program(layout)
+    if kind == "allreduce":
+        return coll.allreduce_program(layout)
+    if kind == "broadcast":
+        return coll.broadcast_program(layout, 0)
+    return coll.matmul_program(*grid)
+
+
+def layout_for(n: int):
+    from repro.dist.mesh import dragonfly_layout
+
+    return dragonfly_layout(n)
+
+
+# ---------------------------------------------------------------------------
+# Analytic seeding
+# ---------------------------------------------------------------------------
+
+def analytic_prices(kind: str, layout, nbytes: int, strategies, grid=None) -> dict[str, float]:
+    """Per-strategy analytic seed prices in µs: the schedule's priced hops
+    through the bytes-aware ``costmodel.seconds`` plus software-overhead
+    terms per replayed stage / fused group / kernel launch."""
+    from repro.runtime import lowering, optimize as ropt
+
+    sched = _schedule(kind, layout, grid)
+    hops = costmodel.price(sched, t_w=1.0, t_s=0.0)
+    hops_pipe = costmodel.price_pipelined(sched, 1.0, 0.0)
+    prog = lowering.lower(sched)
+    n_stages = len(prog.stages)
+    n_groups = ropt.optimize(prog).num_fused_ops
+    n = prog.n
+
+    out: dict[str, float] = {}
+    for s in strategies:
+        if s == "loop":
+            sec = costmodel.seconds(hops, T_W, n_stages * T_DISPATCH,
+                                    bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
+        elif s == "overlap":
+            sec = costmodel.seconds(hops_pipe, T_W, n_stages * T_DISPATCH,
+                                    bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
+        elif s == "fused":
+            sec = costmodel.seconds(hops, T_W, n_groups * T_GROUP,
+                                    bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
+        elif s == "pallas_fused":
+            sec = costmodel.seconds(hops, T_W, n_groups * (T_GROUP + T_KERNEL),
+                                    bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
+        elif s == "xla":
+            # one fused op: latency-optimal collective, e.g. n-1 exchange
+            # steps for all-to-all, 2·log2(n) for a psum ring/tree
+            xla_hops = (n - 1) if kind == "alltoall" else 2 * max(1, n).bit_length()
+            sec = costmodel.seconds(xla_hops, T_W, T_XLA,
+                                    bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
+        else:  # pragma: no cover - candidates() guards the universe
+            raise ValueError(f"unknown strategy {s!r}")
+        out[s] = sec * 1e6
+    return out
+
+
+def priced_rounds(kind: str, layout, grid=None) -> tuple[int, float]:
+    """(rounds, priced hops in t_w units) of the kind's schedule — the
+    paper-table numbers the reports attach to each decision."""
+    sched = _schedule(kind, layout, grid)
+    return len(sched.rounds), costmodel.price(sched, t_w=1.0, t_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+
+def _elems(nbytes: int, dtype: str) -> int:
+    return max(1, int(nbytes) // max(1, np.dtype(dtype).itemsize))
+
+
+def _time_us(fn, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _measure_closure(kind: str, site: str, strategy: str, layout, grid,
+                     nbytes: int, dtype: str):
+    """A zero-arg runnable of (kind, strategy) at the keyed message size,
+    or None when the strategy cannot run here (e.g. too few devices)."""
+    from repro.runtime import optimize as ropt
+
+    prog = _program(kind, layout, grid)
+    e = _elems(nbytes, dtype)
+    rng = np.random.default_rng(0)
+
+    if kind == "matmul":
+        from repro.core.matmul import MatmulGrid
+
+        g = MatmulGrid(*grid)
+        X = max(1, int(np.sqrt(e)))
+        side = g.n * X
+        B = rng.integers(-4, 5, (side, side)).astype(dtype)
+        A = rng.integers(-4, 5, (side, side)).astype(dtype)
+    elif kind == "alltoall":
+        x = rng.standard_normal((prog.n, prog.n, e)).astype(dtype)
+    else:
+        x = rng.standard_normal((prog.n, e)).astype(dtype)
+
+    if site == "host":
+        from repro.runtime.backends.reference import NumpyReferenceBackend
+
+        ref = NumpyReferenceBackend()
+        p = ropt.optimize(prog) if strategy == "fused" else prog
+        if kind == "alltoall":
+            return lambda: ref.run_alltoall(x, p)
+        if kind == "allreduce":
+            return lambda: ref.run_allreduce(x, p)
+        if kind == "broadcast":
+            return lambda: ref.run_broadcast(x, p)
+        return lambda: ref.run_matmul(B, A, p)
+
+    # device-backed sites
+    import jax
+    import jax.numpy as jnp
+
+    if strategy in ("loop", "overlap", "xla") and jax.device_count() < prog.n:
+        return None
+    if strategy == "xla":
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        from repro.runtime import compat
+
+        mesh = Mesh(np.array(jax.devices()[: prog.n]), ("df",))
+        if kind == "alltoall":
+            f = jax.jit(compat.shard_map(
+                lambda s: jax.lax.all_to_all(
+                    s[0], "df", split_axis=0, concat_axis=0)[None],
+                mesh=mesh, in_specs=P("df"), out_specs=P("df")))
+        elif kind == "allreduce":
+            f = jax.jit(compat.shard_map(
+                lambda s: jax.lax.psum(s, "df"),
+                mesh=mesh, in_specs=P("df"), out_specs=P("df")))
+        else:  # broadcast root 0: one masked psum
+            f = jax.jit(compat.shard_map(
+                lambda s: jax.lax.psum(jnp.where(
+                    jax.lax.axis_index("df") == 0, s, jnp.zeros_like(s)), "df"),
+                mesh=mesh, in_specs=P("df"), out_specs=P("df")))
+        xj = jnp.asarray(x)
+        return lambda: jax.block_until_ready(f(xj))
+
+    from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
+
+    if strategy == "pallas_fused":
+        from repro.runtime.backends.pallas_fused import PallasFusedBackend
+
+        be = PallasFusedBackend()
+        p = prog
+    else:
+        be = JaxPpermuteBackend(overlap=(strategy == "overlap"))
+        p = ropt.optimize(prog) if strategy == "fused" else prog
+    if kind == "matmul":
+        Bj, Aj = jnp.asarray(B), jnp.asarray(A)
+        return lambda: jax.block_until_ready(be.run_matmul(Bj, Aj, p))
+    xj = jnp.asarray(x)
+    run = {"alltoall": be.run_alltoall, "allreduce": be.run_allreduce,
+           "broadcast": be.run_broadcast}[kind]
+    return lambda: jax.block_until_ready(run(xj, p))
+
+
+# ---------------------------------------------------------------------------
+# The tuner
+# ---------------------------------------------------------------------------
+
+class Autotuner:
+    """Per-call-site strategy dispatcher with an on-disk measurement cache.
+
+    ``mode``: ``"measure"`` (default — measure once, cache to disk),
+    ``"analytic"`` (rank by seed prices only, touch nothing on disk), or
+    ``"off"`` (return each site's pre-autotuner default). ``force`` pins
+    one strategy wherever it is structurally available. Both default to
+    the ``REPRO_AUTOTUNE`` env var; ``cache_path`` to
+    ``REPRO_AUTOTUNE_CACHE`` / ``benchmarks/autotune_cache.json``.
+    """
+
+    def __init__(self, cache_path: str | os.PathLike | None = None,
+                 mode: str | None = None, force: str | None = None):
+        env = os.environ.get("REPRO_AUTOTUNE", "").strip()
+        if mode is None and force is None and env:
+            if env in ("analytic", "off", "measure"):
+                mode = env
+            elif env in STRATEGIES:
+                force = env
+            else:
+                raise ValueError(
+                    f"REPRO_AUTOTUNE={env!r}: expected 'analytic', 'off', "
+                    f"'measure' or a strategy in {STRATEGIES}")
+        if force is not None and force not in STRATEGIES:
+            raise ValueError(f"unknown forced strategy {force!r}; known: {STRATEGIES}")
+        self.mode = mode or "measure"
+        if self.mode not in ("measure", "analytic", "off"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        self.force = force
+        self.cache_path = pathlib.Path(
+            cache_path or os.environ.get("REPRO_AUTOTUNE_CACHE", DEFAULT_CACHE))
+        self.decisions: list[Decision] = []   # the decision log, for reports
+        self._memo: dict[TuneKey, Decision] = {}
+        self._cache: dict[str, dict] = self._load_cache()
+        self._dirty = False
+
+    # ------------------------------------------------------------- cache
+    def _load_cache(self) -> dict[str, dict]:
+        """Schema-checked, corrupt-tolerant load: anything unreadable or
+        version-mismatched degrades to an empty cache (analytic seeding
+        still works; the next measurement rewrites the file)."""
+        try:
+            raw = json.loads(self.cache_path.read_text())
+            if raw.get("schema") != SCHEMA_VERSION:
+                return {}
+            entries = raw.get("entries")
+            return dict(entries) if isinstance(entries, dict) else {}
+        except (OSError, ValueError):
+            return {}
+
+    def save(self) -> None:
+        if not self._dirty:
+            return
+        payload = {"schema": SCHEMA_VERSION, "entries": self._cache}
+        self.cache_path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.cache_path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.cache_path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+        self._dirty = False
+
+    # ------------------------------------------------------------ decide
+    def decide(self, kind: str, layout=None, nbytes: int = 0,
+               dtype: str = "float32", site: str = "global", grid=None,
+               emulated: bool = False) -> Decision:
+        """The cheapest strategy for one call site key. Deterministic for a
+        warm cache: same key -> same decision, no re-measurement."""
+        if kind == "matmul":
+            if grid is None:
+                raise ValueError("matmul decisions need grid=(K, M)")
+            from repro.core.matmul import MatmulGrid
+
+            topo = MatmulGrid(*grid).topo
+            if layout is None:
+                layout = layout_for(topo.num_routers)
+        else:
+            if layout is None:
+                raise ValueError(f"{kind} decisions need a DeviceLayout")
+            topo = layout.topo
+        key = TuneKey(kind, topo.K, topo.M, bucket_bytes(nbytes),
+                      str(np.dtype(dtype)), site)
+        if key in self._memo:
+            return self._memo[key]
+
+        cands = candidates(kind, site, emulated=emulated)
+        analytic = analytic_prices(kind, layout, key.nbytes, cands, grid)
+        rounds, hops = priced_rounds(kind, layout, grid)
+
+        if self.force is not None:
+            strategy = self.force if self.force in cands else cands[0]
+            dec = Decision(key, strategy, "forced", rounds, hops, analytic, {})
+        elif self.mode == "off":
+            dec = Decision(key, _default_strategy(kind, site), "off",
+                           rounds, hops, analytic, {})
+        else:
+            # analytic mode ignores the cache too: its contract is pure
+            # deterministic arithmetic over the schedule, independent of
+            # whatever a previous measuring run left on disk
+            dec = (self._cached_decision(key, cands, rounds, hops, analytic)
+                   if self.mode == "measure" else None)
+            if dec is None:
+                dec = self._fresh_decision(key, cands, layout, grid,
+                                           rounds, hops, analytic)
+        self._memo[key] = dec
+        self.decisions.append(dec)
+        return dec
+
+    def _cached_decision(self, key, cands, rounds, hops, analytic):
+        ent = self._cache.get(str(key))
+        if not isinstance(ent, dict):
+            return None
+        strategy = ent.get("strategy")
+        if strategy not in cands:   # stale/foreign entry: ignore, re-derive
+            return None
+        measured = ent.get("measured_us")
+        measured = dict(measured) if isinstance(measured, dict) else {}
+        return Decision(key, strategy, "cache", rounds, hops, analytic, measured)
+
+    def _fresh_decision(self, key, cands, layout, grid, rounds, hops, analytic):
+        measured: dict[str, float] = {}
+        if self.mode == "measure":
+            for s in cands:
+                try:
+                    fn = _measure_closure(key.kind, key.site, s, layout, grid,
+                                          key.nbytes, key.dtype)
+                except Exception:
+                    fn = None
+                if fn is not None:
+                    measured[s] = _time_us(fn)
+        if measured:
+            strategy = min(measured, key=measured.__getitem__)
+            dec = Decision(key, strategy, "measured", rounds, hops, analytic, measured)
+            self._cache[str(key)] = {
+                "strategy": strategy, "source": "measured", "rounds": rounds,
+                "measured_us": {k: round(v, 2) for k, v in measured.items()},
+                "analytic_us": {k: round(v, 2) for k, v in analytic.items()},
+            }
+            self._dirty = True
+            self.save()
+        else:
+            strategy = min(analytic, key=analytic.__getitem__)
+            dec = Decision(key, strategy, "analytic", rounds, hops, analytic, {})
+        return dec
+
+    # ------------------------------------------------------------ report
+    def report(self) -> list[dict]:
+        """The decision table accumulated this process, one row per call."""
+        return [d.as_row() for d in self.decisions]
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default tuner (the `backend="auto"` entry points use this)
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Autotuner | None = None
+
+
+def get_autotuner() -> Autotuner:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Autotuner()
+    return _DEFAULT
+
+
+def set_autotuner(tuner: Autotuner | None) -> None:
+    """Install (or with None, reset) the process-wide tuner — tests and
+    launchers use this to control cache location and mode."""
+    global _DEFAULT
+    _DEFAULT = tuner
+
+
+# ---------------------------------------------------------------------------
+# Config-level reports (serve.engine / launch.dryrun)
+# ---------------------------------------------------------------------------
+
+def moe_site_report(cfg, rules, n_tokens: int, dtype: str = "float32",
+                    tuner: Autotuner | None = None) -> dict:
+    """Chosen strategy + priced rounds for a config's MoE EP dispatch site.
+
+    Mirrors the key ``models.moe.moe_apply_ep`` uses for its dispatch and
+    combine all-to-alls: D3 view of the model axis, per-destination buffer
+    bytes from the capacity bound at ``n_tokens`` routed tokens. Returns a
+    JSON-ready dict; configs without an EP-capable MoE report why."""
+    if getattr(cfg, "moe", None) is None:
+        return {"status": "n/a", "reason": "config has no MoE"}
+    m = cfg.moe
+    E = m.num_experts
+    n_model = rules.model_axis_size
+    if E % n_model:
+        return {"status": "n/a",
+                "reason": f"E={E} not divisible by model axis {n_model} (TP path)"}
+    tuner = tuner or get_autotuner()
+    layout = layout_for(n_model)
+    shards = max(1, rules.data_axis_size * n_model)
+    t_loc = max(1, n_tokens // shards)
+    c_loc = max(8, int(m.capacity_factor * t_loc * m.top_k / E))
+    c_loc = -(-c_loc // 8) * 8
+    chunk = (E // n_model) * c_loc * cfg.d_model * np.dtype(dtype).itemsize
+    dec = tuner.decide("alltoall", layout, chunk, dtype=dtype, site="shard")
+    return {
+        "status": "ok",
+        "kind": "alltoall",
+        "topology": f"D3({layout.topo.K},{layout.topo.M})",
+        "key": str(dec.key),
+        "strategy": dec.strategy,
+        "source": dec.source,
+        "rounds": dec.rounds,
+        "priced_hops": dec.hops,
+        "predicted_us": round(dec.predicted_us, 1),
+        "analytic_us": {k: round(v, 1) for k, v in dec.analytic_us.items()},
+        "measured_us": {k: round(v, 1) for k, v in dec.measured_us.items()},
+        "moe_collectives": {"xla": "xla", "loop": "dragonfly",
+                            "overlap": "dragonfly_overlap"}[dec.strategy],
+    }

@@ -31,6 +31,11 @@ Built-in backends:
     §2 ``mul_a`` contraction goes through ``kernels/block_matmul``.
     ``interpret=True`` (automatic off-TPU) runs the same kernels in the
     Pallas interpreter so CPU CI exercises the fused path bit-for-bit.
+  * ``auto`` — no executor of its own: each call asks the price-driven
+    autotuner (``runtime.autotune``) for the cheapest strategy at this
+    call site — per-stage loop, overlapped, fused-table, Pallas, or the
+    plain XLA collective — and delegates to it. Same bits either way; the
+    tuner only moves latency.
 
 Every backend's ``run_*`` also accepts an ``optimize.OptimizedProgram``
 (the fused table form) and must produce the same bits for it as for the
@@ -70,12 +75,19 @@ def _load_pallas_fused():
     return PallasFusedBackend
 
 
+def _load_auto():
+    from repro.runtime.backends.auto import AutoBackend
+
+    return AutoBackend
+
+
 #: canonical name -> lazy class loader (lazy so the reference backend never
 #: pulls in jax); aliases below map user-facing shorthands onto it.
 _REGISTRY = {
     "jax_ppermute": _load_jax_ppermute,
     "reference": _load_reference,
     "pallas_fused": _load_pallas_fused,
+    "auto": _load_auto,
 }
 
 _ALIASES = {"jax": "jax_ppermute", "numpy": "reference", "pallas": "pallas_fused"}

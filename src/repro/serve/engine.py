@@ -92,3 +92,22 @@ class Engine:
             if not self.slot_req:
                 break
             self.step()
+
+    # ---------------------------------------------------------- reporting
+    def collective_report(self, rules=None, tuner=None) -> dict:
+        """What the price-driven autotuner picks for this engine's MoE
+        dispatch site (the §3 all-to-all boundary): chosen strategy, its
+        source (measured/cache/analytic/forced), and the paper's priced
+        rounds. ``rules`` defaults to the active sharding rules; an
+        unsharded engine (single device, no launcher) reports n/a."""
+        from repro.dist import sharding as SH
+        from repro.runtime import autotune
+
+        if rules is None:
+            act = SH.active()
+            rules = act[0] if act else None
+        if rules is None:
+            return {"status": "n/a", "reason": "no active sharding rules"}
+        return autotune.moe_site_report(
+            self.cfg, rules, n_tokens=self.slots, tuner=tuner
+        )

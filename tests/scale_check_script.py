@@ -1,0 +1,78 @@
+"""64-device scale smoke — run as a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count=64 (set before jax
+import, see test_autotune.py and the CI scale step). D3(4,4) doubly-
+parallel all-to-all plus the Theorem-2 matmul on grid (2,4) — K²M² = 64
+devices — both bit-exact against ground truth. Exits 0 on success."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=64")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist import collectives as coll
+from repro.dist.mesh import dragonfly_layout
+from repro.runtime.compat import shard_map
+
+
+def get_mesh(n):
+    return Mesh(np.array(jax.devices()[:n]), ("x",))
+
+
+def check_all_to_all_64():
+    n = 64
+    layout = dragonfly_layout(n)
+    assert (layout.topo.K, layout.topo.M) == (4, 4), layout.topo
+    mesh = get_mesh(n)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, n, 4)).astype(np.float32)
+
+    f = jax.jit(
+        shard_map(
+            lambda s: coll.dragonfly_all_to_all(s[0], "x", layout)[None],
+            mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+        )
+    )
+    got = np.asarray(f(x))
+    np.testing.assert_allclose(got, x.transpose(1, 0, 2), rtol=1e-6)
+    print("D3(4,4) all_to_all OK (64 devices)")
+
+
+def check_matmul_64():
+    # Theorem 2 grid (K, M) = (2, 4): the K×K array of M×M blocks needs
+    # K²M² = 64 devices in router order.
+    from repro.core.matmul import MatmulGrid, gather_blocks, scatter_blocks
+
+    K, M = 2, 4
+    grid = MatmulGrid(K, M)
+    prog = coll.matmul_program(K, M)
+    assert prog.n == 64, prog.n
+    mesh = get_mesh(64)
+    b = 4
+    rng = np.random.default_rng(3)
+    side = grid.n * b
+    # integer-valued floats: the round-structured sum is bit-exact vs @
+    Bmat = rng.integers(-4, 5, (side, side)).astype(np.float32)
+    Amat = rng.integers(-4, 5, (side, side)).astype(np.float32)
+    bb = jnp.asarray(scatter_blocks(grid, Bmat))
+    aa = jnp.asarray(scatter_blocks(grid, Amat))
+
+    f = jax.jit(
+        shard_map(
+            lambda p, q: coll.dragonfly_matmul(p[0], q[0], "x", (K, M))[None],
+            mesh=mesh, in_specs=(P("x"), P("x")), out_specs=P("x"),
+        )
+    )
+    got = gather_blocks(grid, np.asarray(f(bb, aa)))
+    np.testing.assert_array_equal(got, Bmat @ Amat)
+    print("Theorem-2 matmul grid (2,4) OK (64 devices, bit-exact)")
+
+
+if __name__ == "__main__":
+    assert jax.device_count() >= 64, jax.device_count()
+    check_all_to_all_64()
+    check_matmul_64()
+    print("ALL SCALE CHECKS PASSED")
