@@ -9,8 +9,10 @@ across PRs.
 ``--compare OLD.json NEW.json`` diffs two such trajectories instead of
 benchmarking: shared records whose us_per_call grew beyond ``--tolerance``
 (default 0.5 = +50%, CPU CI timings are noisy) print as REGRESSION lines.
-Warn-only by default; ``--strict`` exits 1 when regressions exist (the CI
-bench job runs it warn-only against the committed baseline).
+Warn-only by default; ``--strict`` exits 1 when regressions exist, and
+``--strict-families autotuner,optimizer`` promotes just those record-name
+prefixes to CI-failing while the rest stay warn-only (what the CI bench
+job runs against the committed baseline).
 """
 
 from __future__ import annotations
@@ -468,6 +470,112 @@ def bench_autotuner(log=print):
     tuner.save()
 
 
+def bench_moe_pipeline(log=print):
+    """Pipelined shard-path dispatch (§3 Schedules 1–3 overlapped with
+    expert compute): the MoE-shaped dispatch+FFN+combine round trip on the
+    16-device D3(4,2) mesh, per execution path —
+
+      * ``reference``     — host NumPy ground truth (untimed oracle);
+      * ``loop``          — per-stage ppermute dispatch, one batched FFN
+        over all arrivals, per-stage combine (the sequential baseline);
+      * ``xla``           — ``lax.all_to_all`` dispatch/combine around the
+        same batched FFN;
+      * ``overlap_fused`` — ``alltoall_compute`` on the pipelined program:
+        each wave's ppermutes issue while the previous wave's arrivals
+        drain through the FFN and return over the inverse pairs.
+
+    Shapes mirror the EP hot path (E_loc=2, C_loc=32, d=64, f=128 silu-
+    gated FFN). Bit-exactness vs the reference is asserted in-line for
+    every path, as is the tentpole's acceptance bound: overlap_fused
+    strictly beats the sequential loop. ``moe_pipeline_decision`` rows
+    record what the autotuner picks for the matching compute-keyed shard
+    sites (native 16-device, small 8-device, and an emulated site where
+    the fused-XLA candidate is excluded) — at least one must select
+    overlap_fused, also asserted in-line."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.runtime import autotune as at
+
+    n, E_loc, C_loc, d, f = 16, 2, 32, 64, 128
+    tag = f"n={n},E_loc={E_loc},C_loc={C_loc},d={d},f={f}"
+    if jax.device_count() < n:
+        for path in ("loop", "xla", "overlap_fused"):
+            log(f"moe_pipeline,path={path},{tag},skipped=need_{n}_devices")
+        return
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.dist.collectives import alltoall_program
+    from repro.dist.mesh import dragonfly_layout
+    from repro.runtime import compat
+    from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
+    from repro.runtime.backends.reference import NumpyReferenceBackend
+
+    layout = dragonfly_layout(n)
+    pipe = alltoall_program(layout, pipelined=1)
+    barrier = alltoall_program(layout)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, n, E_loc, C_loc, d)).astype(np.float32)
+    WG = jnp.asarray(rng.standard_normal((d, f)).astype(np.float32) * 0.05)
+    WI = jnp.asarray(rng.standard_normal((d, f)).astype(np.float32) * 0.05)
+    WO = jnp.asarray(rng.standard_normal((f, d)).astype(np.float32) * 0.05)
+
+    def ffn(chunks):
+        g = jax.nn.silu(chunks @ WG) * (chunks @ WI)
+        return g @ WO
+
+    ref = NumpyReferenceBackend()
+    want = ref.run_alltoall_compute(
+        x.copy(), pipe, lambda j, c: np.asarray(ffn(jnp.asarray(c))))
+    log(f"moe_pipeline,path=reference,{tag},oracle=1")
+
+    mesh = Mesh(np.array(jax.devices()[:n]), ("df",))
+    sm = lambda body: jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=P("df"), out_specs=P("df")))
+    be_loop = JaxPpermuteBackend()
+    be_of = JaxPpermuteBackend(overlap_fused=True)
+    runners = {
+        "loop": sm(lambda s: be_loop.alltoall(
+            ffn(be_loop.alltoall(s[0], "df", barrier)), "df", barrier)[None]),
+        "xla": sm(lambda s: jax.lax.all_to_all(
+            ffn(jax.lax.all_to_all(s[0], "df", split_axis=0, concat_axis=0)),
+            "df", split_axis=0, concat_axis=0)[None]),
+        "overlap_fused": sm(
+            lambda s: be_of.alltoall_compute(s[0], "df", pipe, ffn)[None]),
+    }
+    times: dict[str, float] = {}
+    for path, fn in runners.items():
+        out, us = _timed(lambda: jax.block_until_ready(fn(x)), iters=5)
+        np.testing.assert_array_equal(np.asarray(out), want)
+        times[path] = us
+        log(f"moe_pipeline,path={path},{tag},waves={pipe.num_rounds},"
+            f"us_per_call={us:.0f}")
+    assert times["overlap_fused"] < times["loop"], (
+        f"pipelining lost to the sequential loop: {times}")
+
+    # what the tuner records for the matching compute-keyed shard sites
+    # (default on-disk cache, the CI artifact next to the BENCH trajectory)
+    tuner = at.Autotuner()
+    chunk = E_loc * C_loc * d * 4
+    sites = [
+        (layout, chunk, at.moe_compute_us(E_loc, C_loc, n, d, f), False),
+        (at.layout_for(8), chunk, 2000, False),
+        (layout, chunk, at.moe_compute_us(E_loc, C_loc, n, d, f), True),
+    ]
+    chosen = []
+    for lay, nbytes, cus, emulated in sites:
+        dec = tuner.decide("alltoall", lay, nbytes, site="shard",
+                           emulated=emulated, compute_us=cus)
+        chosen.append(dec.strategy)
+        log(f"moe_pipeline_decision,site=shard,K={lay.topo.K},M={lay.topo.M},"
+            f"b={dec.key.nbytes},c={dec.key.compute_us},emulated={int(emulated)},"
+            f"strategy={dec.strategy},source={dec.source},"
+            f"us_per_call={dec.predicted_us:.0f}")
+    assert "overlap_fused" in chosen, (
+        f"no compute-keyed shard site selected overlap_fused: {chosen}")
+    tuner.save()
+
+
 # ------------------------------------------------------- trajectory compare
 #: param keys excluded from record identity when diffing trajectories —
 #: they vary run to run (timing noise, cache state) without the record
@@ -485,19 +593,22 @@ def _record_key(rec: dict) -> str:
 
 
 def compare(old_path: str, new_path: str, tolerance: float = 0.5,
-            log=print) -> int:
-    """Diff two ``--json`` trajectories; returns the regression count.
+            log=print, strict_families: tuple[str, ...] = ()) -> tuple[int, int]:
+    """Diff two ``--json`` trajectories; returns (regressions, strict).
 
     A shared record regresses when its us_per_call grew beyond
     ``1 + tolerance``; symmetric improvements and added/removed records are
     reported informationally. Records without timings (skipped rows,
-    structural records) are ignored."""
+    structural records) are ignored. ``strict_families`` are record-name
+    prefixes (e.g. ``("autotuner", "optimizer")``) whose regressions count
+    toward the second, CI-failing total even in warn-only mode — the
+    families whose timings have soaked enough to be load-bearing."""
     with open(old_path) as f:
         old = {_record_key(r): r for r in json.load(f)}
     with open(new_path) as f:
         new = {_record_key(r): r for r in json.load(f)}
     shared = sorted(set(old) & set(new))
-    regressions = 0
+    regressions = strict = 0
     for key in shared:
         o, nrec = old[key], new[key]
         if "us_per_call" not in o or "us_per_call" not in nrec:
@@ -508,7 +619,10 @@ def compare(old_path: str, new_path: str, tolerance: float = 0.5,
         ratio = nu / ou
         if ratio > 1 + tolerance:
             regressions += 1
-            log(f"REGRESSION {key}: {ou:.0f}us -> {nu:.0f}us "
+            in_family = any(nrec["name"].startswith(f) for f in strict_families)
+            strict += in_family
+            sev = "REGRESSION(strict)" if in_family else "REGRESSION"
+            log(f"{sev} {key}: {ou:.0f}us -> {nu:.0f}us "
                 f"({ratio:.2f}x > {1 + tolerance:.2f}x tolerance)")
         elif ratio < 1 / (1 + tolerance):
             log(f"improved   {key}: {ou:.0f}us -> {nu:.0f}us ({ratio:.2f}x)")
@@ -517,8 +631,9 @@ def compare(old_path: str, new_path: str, tolerance: float = 0.5,
     for key in sorted(set(old) - set(new)):
         log(f"removed    {key}")
     log(f"# compared {len(shared)} shared records; "
-        f"{regressions} regression(s) beyond +{tolerance:.0%}")
-    return regressions
+        f"{regressions} regression(s) beyond +{tolerance:.0%}"
+        + (f", {strict} in strict families" if strict_families else ""))
+    return regressions, strict
 
 
 def _parse_record(line: str) -> dict | None:
@@ -557,11 +672,17 @@ def main(argv=None) -> None:
     ap.add_argument("--strict", action="store_true",
                     help="with --compare: exit 1 when regressions exist "
                          "(default is warn-only)")
+    ap.add_argument("--strict-families", metavar="PREFIXES", default="",
+                    help="with --compare: comma-separated record-name "
+                         "prefixes (e.g. autotuner,optimizer) whose "
+                         "regressions exit 1 even without --strict")
     args = ap.parse_args(argv)
 
     if args.compare:
-        n_reg = compare(*args.compare, tolerance=args.tolerance)
-        if args.strict and n_reg:
+        fams = tuple(f for f in args.strict_families.split(",") if f)
+        n_reg, n_strict = compare(*args.compare, tolerance=args.tolerance,
+                                  strict_families=fams)
+        if (args.strict and n_reg) or n_strict:
             raise SystemExit(1)
         return
 
@@ -599,6 +720,8 @@ def main(argv=None) -> None:
     bench_concurrent_guests(log)
     print("# ---- price-driven autotuner (decision table + strategy timings)")
     bench_autotuner(log)
+    print("# ---- pipelined shard-path dispatch (waves overlapped with expert FFN)")
+    bench_moe_pipeline(log)
     bench_core_micro(log)
     bench_kernels(log)
     bench_train_smoke(log)

@@ -91,9 +91,17 @@ def _emulated(prog: CollectiveProgram, guest: D3, embedding: Embedding | None):
 @functools.lru_cache(maxsize=None)
 def alltoall_program(
     layout: DeviceLayout, embedding: Embedding | None = None,
-    *, optimized: bool = False,
+    *, optimized: bool = False, pipelined: int = 0,
 ) -> CollectiveProgram:
-    prog = lowering.lower(a2a.schedule(layout.da_params, layout.topo))
+    """``pipelined=0`` lowers the barrier §3 schedule (every stage stamped
+    start_step 0). ``pipelined=offset >= 1`` lowers the Schedule-``offset``
+    pipelined variant instead: stages carry the measured ``round_starts``
+    launch stamps, which is what gives the overlapped executors
+    (``overlap``/``overlap_fused`` replay, ``alltoall_compute``) real waves
+    to interleave."""
+    sched = (a2a.pipelined_schedule(layout.da_params, pipelined, layout.topo)
+             if pipelined else a2a.schedule(layout.da_params, layout.topo))
+    prog = lowering.lower(sched)
     prog = _emulated(prog, layout.topo, embedding)
     return optimize(prog) if optimized else prog
 
@@ -233,7 +241,32 @@ def dragonfly_all_to_all(x, axis_name: str, layout: DeviceLayout, backend=None,
     ``embedding``, ``layout`` is the guest and the exchange runs on the
     host mesh axis (n = host routers); idle devices pass zeros through."""
     be = _resolve_backend(backend)
-    return be.alltoall(x, axis_name, alltoall_program(layout, embedding))
+    pipelined = 1 if getattr(be, "overlap_fused", False) else 0
+    return be.alltoall(
+        x, axis_name, alltoall_program(layout, embedding, pipelined=pipelined))
+
+
+def dragonfly_all_to_all_compute(x, axis_name: str, layout: DeviceLayout,
+                                 compute, backend=None,
+                                 embedding: Embedding | None = None,
+                                 offset: int = 1):
+    """Fused §3 dispatch + per-destination compute + combine round trip:
+    out[j] = compute_j(x[j]) — every chunk processed AT device j and
+    returned to its sender, replacing a dispatch all-to-all, a batched
+    local transform, and a combine all-to-all with ONE overlapped pipeline
+    (Schedules 1–3: wave w's ppermutes fly while wave w-1's arrivals are
+    contracted). ``compute`` is THIS shard's batched chunk transform
+    (called with the (V, ...) stack of one wave's arrivals — close it over
+    the shard's weights); ``offset`` picks the launch schedule. Bit-exact
+    vs the sequential three-step form for chunk-batchable ``compute``.
+
+    With an ``embedding``, ``layout`` is the guest and the round trip runs
+    on the host mesh axis; idle devices contribute nothing and their rows
+    stay zero."""
+    be = _resolve_backend(backend)
+    return be.alltoall_compute(
+        x, axis_name,
+        alltoall_program(layout, embedding, pipelined=offset), compute)
 
 
 def dragonfly_all_reduce(x, axis_name: str, layout: DeviceLayout, backend=None,

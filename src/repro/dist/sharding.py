@@ -34,7 +34,9 @@ class ShardRules:
     seq_parallel: bool = False
     # "xla" (fused op) | "dragonfly" (§3 program on the ppermute backend)
     # | "dragonfly_overlap" (same program, start_step-ordered replay)
-    # | "auto" (runtime.autotune picks the cheapest of the three per site)
+    # | "dragonfly_overlap_fused" (dispatch + expert FFN + combine as ONE
+    #   Schedules-1-3 wave pipeline, compute overlapping the rounds)
+    # | "auto" (runtime.autotune picks the cheapest per site)
     moe_collectives: str = "xla"
     model_axis_size: int = 16
     data_axis_size: int = 16

@@ -421,7 +421,8 @@ def main(argv=None):
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--moe-collectives",
-                    choices=["xla", "dragonfly", "dragonfly_overlap", "auto"],
+                    choices=["xla", "dragonfly", "dragonfly_overlap",
+                             "dragonfly_overlap_fused", "auto"],
                     default=None)
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--tag", default="")

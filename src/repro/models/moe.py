@@ -156,11 +156,16 @@ def moe_apply_ep(params, x, cfg):
     runtime/lowering.py, replayed by the jax_ppermute backend (via
     dist/collectives.py) — same payload, K·M²/s visible rounds (see
     EXPERIMENTS.md §Perf). ``dragonfly_overlap`` replays the same program
-    in start_step order so independent ppermutes overlap. ``auto`` asks the
-    price-driven autotuner (runtime/autotune.py) which of the three wins at
-    this site's key — D3 view of the axis, per-destination buffer bytes —
-    and runs that; the decision happens here in Python, BEFORE shard_map,
-    so the traced collective is whichever fixed path the tuner picked.
+    in start_step order so independent ppermutes overlap.
+    ``dragonfly_overlap_fused`` goes further: dispatch, expert FFN and
+    combine become ONE fused round trip (``dragonfly_all_to_all_compute``
+    on the §3 pipelined schedule) where each wave's ppermutes issue while
+    the previous wave's arrivals run through the experts. ``auto`` asks
+    the price-driven autotuner (runtime/autotune.py) which of the four
+    wins at this site's key — D3 view of the axis, per-destination buffer
+    bytes, the expert FFN's ``moe_compute_us`` — and runs that; the
+    decision happens here in Python, BEFORE shard_map, so the traced
+    collective is whichever fixed path the tuner picked.
     """
     from repro.dist import sharding as SH
     from repro.runtime import compat
@@ -195,9 +200,12 @@ def moe_apply_ep(params, x, cfg):
         chunk = E_loc * c_loc * d * jnp.dtype(x.dtype).itemsize
         dec = autotune.get_autotuner().decide(
             "alltoall", autotune.layout_for(n_model), chunk,
-            dtype=str(x.dtype), site="shard")
+            dtype=str(x.dtype), site="shard",
+            compute_us=autotune.moe_compute_us(
+                E_loc, c_loc, n_model, d, m.d_ff_expert))
         moe_coll = {"xla": "xla", "loop": "dragonfly",
-                    "overlap": "dragonfly_overlap"}[dec.strategy]
+                    "overlap": "dragonfly_overlap",
+                    "overlap_fused": "dragonfly_overlap_fused"}[dec.strategy]
 
     def local_fn(xt, w_in, w_gate, w_out, router):
         T_loc = xt.shape[0]
@@ -219,32 +227,57 @@ def moe_apply_ep(params, x, cfg):
         # of ppermutes on the D3 view of the axis) via the program
         # executor; "dragonfly_overlap" the same program replayed in
         # start_step order (cross-round ppermute overlap, hiding round
-        # latency behind per-round compute); "xla" the fused op.
+        # latency behind per-round compute); "dragonfly_overlap_fused"
+        # the whole dispatch -> expert FFN -> combine round trip as ONE
+        # Schedules 1-3 pipeline (expert compute for arrived capacity
+        # chunks overlaps the next wave's ppermutes); "xla" the fused op.
         buf = buf.reshape(n_model, E_loc, C_loc, d)
-        if moe_coll.startswith("dragonfly"):
-            from repro.dist.collectives import dragonfly_all_to_all
+        if moe_coll == "dragonfly_overlap_fused":
+            from repro.dist.collectives import dragonfly_all_to_all_compute
             from repro.dist.mesh import dragonfly_layout
             from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
 
-            layout = dragonfly_layout(n_model)
-            a2a_backend = JaxPpermuteBackend(
-                overlap=moe_coll == "dragonfly_overlap"
+            def expert_chunk(chunks):
+                # one wave's arrivals, (V, E_loc, C_loc, d): the same
+                # silu-gated FFN as the sequential path, batched over the
+                # wave — bit-exact vs the big-batch contraction
+                h = jax.nn.silu(
+                    jnp.einsum("...ecd,edf->...ecf", chunks, w_gate)
+                ) * jnp.einsum("...ecd,edf->...ecf", chunks, w_in)
+                return jnp.einsum("...ecf,efd->...ecd", h, w_out)
+
+            back = dragonfly_all_to_all_compute(
+                buf, t_ax, dragonfly_layout(n_model), expert_chunk,
+                backend=JaxPpermuteBackend(overlap_fused=True),
+            ).reshape(E, C_loc, d)
+        else:
+            if moe_coll.startswith("dragonfly"):
+                from repro.dist.collectives import dragonfly_all_to_all
+                from repro.dist.mesh import dragonfly_layout
+                from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
+
+                layout = dragonfly_layout(n_model)
+                a2a_backend = JaxPpermuteBackend(
+                    overlap=moe_coll == "dragonfly_overlap"
+                )
+                recv = dragonfly_all_to_all(buf, t_ax, layout,
+                                            backend=a2a_backend)
+            else:
+                recv = jax.lax.all_to_all(buf, t_ax, split_axis=0,
+                                          concat_axis=0)
+            recv = recv.transpose(1, 0, 2, 3).reshape(E_loc, n_model * C_loc, d)
+            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, w_gate)) * jnp.einsum(
+                "ecd,edf->ecf", recv, w_in
             )
-            recv = dragonfly_all_to_all(buf, t_ax, layout, backend=a2a_backend)
-        else:
-            recv = jax.lax.all_to_all(buf, t_ax, split_axis=0, concat_axis=0)
-        recv = recv.transpose(1, 0, 2, 3).reshape(E_loc, n_model * C_loc, d)
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, w_gate)) * jnp.einsum(
-            "ecd,edf->ecf", recv, w_in
-        )
-        y = jnp.einsum("ecf,efd->ecd", h, w_out)
-        # ---- combine all-to-all
-        y = y.reshape(E_loc, n_model, C_loc, d).transpose(1, 0, 2, 3)
-        if moe_coll.startswith("dragonfly"):
-            back = dragonfly_all_to_all(y, t_ax, layout, backend=a2a_backend)
-        else:
-            back = jax.lax.all_to_all(y, t_ax, split_axis=0, concat_axis=0)
-        back = back.reshape(E, C_loc, d)
+            y = jnp.einsum("ecf,efd->ecd", h, w_out)
+            # ---- combine all-to-all
+            y = y.reshape(E_loc, n_model, C_loc, d).transpose(1, 0, 2, 3)
+            if moe_coll.startswith("dragonfly"):
+                back = dragonfly_all_to_all(y, t_ax, layout,
+                                            backend=a2a_backend)
+            else:
+                back = jax.lax.all_to_all(y, t_ax, split_axis=0, concat_axis=0)
+            back = back.reshape(E, C_loc, d)
         out = jnp.zeros((T_loc, d), xt.dtype)
         g = back[flat_e, jnp.clip(slot, 0, C_loc - 1)]
         out = out.at[src].add(

@@ -17,7 +17,10 @@ hardcoded one strategy. The ``Autotuner`` closes that gap:
       - ``site="global"`` (device whole-array ``run_*``): loop | fused |
         pallas_fused | xla
       - ``site="shard"``  (inside a caller's shard_map, e.g. MoE
-        dispatch): xla | loop | overlap
+        dispatch): xla | loop | overlap | overlap_fused (all-to-all
+        only — the fused wave pipeline that overlaps dispatch with the
+        per-destination compute; priced with the max-of-overlap discount
+        when the key carries a ``compute_us`` term)
 
     where ``loop`` is the per-stage D3 schedule replay, ``overlap`` the
     same program in ``start_step`` order, ``fused`` the ``optimize()``
@@ -70,7 +73,8 @@ DEFAULT_CACHE = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "au
 
 KINDS = ("alltoall", "allreduce", "broadcast", "matmul")
 SITES = ("host", "global", "shard")
-STRATEGIES = ("loop", "overlap", "fused", "pallas_fused", "xla")
+STRATEGIES = ("loop", "overlap", "fused", "pallas_fused", "xla",
+              "overlap_fused")
 
 #: analytic seed constants (calibration overrides these — they only need to
 #: produce a sane ranking before the first measurement lands in the cache)
@@ -80,6 +84,7 @@ T_DISPATCH = 5.0e-6   # software overhead per replayed stage (loop paths)
 T_GROUP = 2.0e-6      # software overhead per fused table group
 T_KERNEL = 10.0e-6    # extra per-group cost of a Pallas kernel launch
 T_XLA = 20.0e-6       # fixed overhead of one fused XLA collective
+COMPUTE_RATE = 2e9    # proxy flops/s for sizing synthetic pipeline compute
 
 
 # ---------------------------------------------------------------------------
@@ -93,9 +98,25 @@ def bucket_bytes(nbytes: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
+def bucket_compute_us(compute_us: int) -> int:
+    """Bucket the per-device fused-compute term: 0 (pure collective) stays
+    0, anything else rounds up to the next power of two µs."""
+    n = int(compute_us)
+    return 0 if n <= 0 else 1 << (n - 1).bit_length()
+
+
 @dataclasses.dataclass(frozen=True)
 class TuneKey:
-    """One call site: what is being moved, over which topology, how big."""
+    """One call site: what is being moved, over which topology, how big.
+
+    ``compute_us`` is the bucketed per-device cost of the compute fused
+    into the collective's round trip (MoE expert FFN at dispatch sites);
+    0 means a pure data-movement site. ``emulated`` marks guest-on-host
+    ``active_devices`` sites, whose candidate set excludes ``xla`` — it
+    must be part of the key or a native decision (possibly ``xla``) would
+    be replayed from the memo/cache at an emulated site. Pure native
+    sites keep the pre-compute key string (no ``|c``/``|emu`` suffix), so
+    caches recorded before these fields existed stay valid."""
 
     kind: str      # alltoall | allreduce | broadcast | matmul
     K: int         # D3(K, M) of the mesh axis (matmul: the grid's topo)
@@ -103,9 +124,14 @@ class TuneKey:
     nbytes: int    # bucketed message bytes (per chunk / vector / block)
     dtype: str
     site: str      # host | global | shard
+    compute_us: int = 0  # bucketed fused-compute µs per device (0 = none)
+    emulated: bool = False  # guest-on-host program (xla excluded)
 
     def __str__(self) -> str:
-        return f"{self.kind}|K{self.K}M{self.M}|b{self.nbytes}|{self.dtype}|{self.site}"
+        tail = f"|c{self.compute_us}" if self.compute_us else ""
+        tail += "|emu" if self.emulated else ""
+        return (f"{self.kind}|K{self.K}M{self.M}|b{self.nbytes}"
+                f"|{self.dtype}|{self.site}{tail}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +183,8 @@ def candidates(kind: str, site: str, *, emulated: bool = False) -> tuple[str, ..
         out = ("loop", "overlap")
         if kind != "matmul":
             out = ("xla",) + out
+        if kind == "alltoall":
+            out += ("overlap_fused",)
     else:
         raise ValueError(f"unknown site {site!r}; expected one of {SITES}")
     if emulated:
@@ -209,10 +237,17 @@ def layout_for(n: int):
 # Analytic seeding
 # ---------------------------------------------------------------------------
 
-def analytic_prices(kind: str, layout, nbytes: int, strategies, grid=None) -> dict[str, float]:
+def analytic_prices(kind: str, layout, nbytes: int, strategies, grid=None,
+                    compute_us: int = 0) -> dict[str, float]:
     """Per-strategy analytic seed prices in µs: the schedule's priced hops
     through the bytes-aware ``costmodel.seconds`` plus software-overhead
-    terms per replayed stage / fused group / kernel launch."""
+    terms per replayed stage / fused group / kernel launch.
+
+    ``compute_us`` prices a compute term fused into the site's round trip
+    (MoE expert FFN). Sequential strategies pay dispatch + compute + combine
+    as a SUM; ``overlap_fused`` issues waves while already-arrived chunks
+    are contracted, so it pays max(pipelined wire time, compute) — the
+    Schedules 1–3 overlap discount — plus its per-stage table overhead."""
     from repro.runtime import lowering, optimize as ropt
 
     sched = _schedule(kind, layout, grid)
@@ -222,6 +257,7 @@ def analytic_prices(kind: str, layout, nbytes: int, strategies, grid=None) -> di
     n_stages = len(prog.stages)
     n_groups = ropt.optimize(prog).num_fused_ops
     n = prog.n
+    compute_s = max(0, int(compute_us)) * 1e-6
 
     out: dict[str, float] = {}
     for s in strategies:
@@ -243,8 +279,23 @@ def analytic_prices(kind: str, layout, nbytes: int, strategies, grid=None) -> di
             xla_hops = (n - 1) if kind == "alltoall" else 2 * max(1, n).bit_length()
             sec = costmodel.seconds(xla_hops, T_W, T_XLA,
                                     bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
+        elif s == "overlap_fused":
+            wire = costmodel.seconds(hops_pipe, T_W, 0.0,
+                                     bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
+            if compute_s and kind == "alltoall":
+                # overlap discount: the expert compute hides behind the
+                # pipelined dispatch+return rounds (and vice versa) — only
+                # the table bookkeeping is serial
+                sec = max(2.0 * wire, compute_s) + n_stages * T_GROUP
+            else:
+                sec = wire + n_stages * T_GROUP
+            out[s] = sec * 1e6
+            continue
         else:  # pragma: no cover - candidates() guards the universe
             raise ValueError(f"unknown strategy {s!r}")
+        if compute_s and kind == "alltoall":
+            # sequential round trip: dispatch + compute + combine
+            sec = 2.0 * sec + compute_s
         out[s] = sec * 1e6
     return out
 
@@ -276,9 +327,15 @@ def _time_us(fn, warmup: int = 1, iters: int = 3) -> float:
 
 
 def _measure_closure(kind: str, site: str, strategy: str, layout, grid,
-                     nbytes: int, dtype: str):
+                     nbytes: int, dtype: str, compute_us: int = 0):
     """A zero-arg runnable of (kind, strategy) at the keyed message size,
-    or None when the strategy cannot run here (e.g. too few devices)."""
+    or None when the strategy cannot run here (e.g. too few devices).
+
+    ``compute_us > 0`` all-to-all keys measure the FULL round-trip
+    pipeline — dispatch, a synthetic per-chunk contraction sized to
+    ``compute_us`` per device (via ``COMPUTE_RATE``), combine — so the
+    overlap discount of ``overlap_fused`` shows up in the timing instead
+    of being assumed."""
     from repro.runtime import optimize as ropt
 
     prog = _program(kind, layout, grid)
@@ -315,8 +372,63 @@ def _measure_closure(kind: str, site: str, strategy: str, layout, grid,
     import jax
     import jax.numpy as jnp
 
-    if strategy in ("loop", "overlap", "xla") and jax.device_count() < prog.n:
+    if (strategy in ("loop", "overlap", "xla", "overlap_fused")
+            and jax.device_count() < prog.n):
         return None
+
+    if kind == "alltoall" and compute_us > 0:
+        # full dispatch+compute+combine pipeline: sequential strategies do
+        # a2a -> batched contraction -> a2a; overlap_fused runs the fused
+        # wave pipeline over the Schedule-1 stamped program
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        from repro.dist.collectives import alltoall_program
+        from repro.runtime import compat
+        from repro.runtime.backends.jax_ppermute import JaxPpermuteBackend
+
+        n = prog.n
+        # the proxy is a silu-gated FFN (6·tokens·d_in·f flops per device)
+        # with each chunk factored into (tokens, d_in) rows: both the
+        # matmul geometry and the gate's elementwise traffic match what a
+        # real MoE closure does — a flat (V, e) matmul would be
+        # pathologically skinny per wave and elementwise-free, penalizing
+        # the wave-sliced strategies for a shape no caller uses
+        f_dim = max(1, int(compute_us * 1e-6 * COMPUTE_RATE / (6.0 * n * e)))
+        d_in = next((w for w in (64, 32, 16, 8, 4, 2, 1) if e % w == 0))
+        # ~1/sqrt(fan-in) weight scale keeps activations O(1) through the
+        # gate: unscaled normals push silu into saturated/denormal ranges
+        # no trained FFN visits, distorting the timing
+        WG = jnp.asarray((rng.standard_normal((d_in, f_dim))
+                          / np.sqrt(d_in)).astype(dtype))
+        WI = jnp.asarray((rng.standard_normal((d_in, f_dim))
+                          / np.sqrt(d_in)).astype(dtype))
+        WO = jnp.asarray((rng.standard_normal((f_dim, d_in))
+                          / np.sqrt(f_dim)).astype(dtype))
+        mesh = Mesh(np.array(jax.devices()[:n]), ("df",))
+
+        def comp(chunks):
+            lead = chunks.shape[:-1]
+            h = chunks.reshape(-1, d_in)
+            g = jax.nn.silu(h @ WG) * (h @ WI)
+            return (g @ WO).reshape(*lead, e)
+
+        if strategy == "overlap_fused":
+            be = JaxPpermuteBackend(overlap_fused=True)
+            pipe = alltoall_program(layout, pipelined=1)
+            local = lambda s: be.alltoall_compute(s[0], "df", pipe, comp)[None]
+        else:
+            if strategy == "xla":
+                a2a = lambda v: jax.lax.all_to_all(
+                    v, "df", split_axis=0, concat_axis=0)
+            else:
+                be = JaxPpermuteBackend(overlap=(strategy == "overlap"))
+                a2a = lambda v: be.alltoall(v, "df", prog)
+            local = lambda s: a2a(comp(a2a(s[0])))[None]
+        f = jax.jit(compat.shard_map(
+            local, mesh=mesh, in_specs=P("df"), out_specs=P("df")))
+        xj = jnp.asarray(x)
+        return lambda: jax.block_until_ready(f(xj))
+
     if strategy == "xla":
         from jax.sharding import Mesh, PartitionSpec as P
 
@@ -347,6 +459,11 @@ def _measure_closure(kind: str, site: str, strategy: str, layout, grid,
 
         be = PallasFusedBackend()
         p = prog
+    elif strategy == "overlap_fused":
+        from repro.dist.collectives import alltoall_program
+
+        be = JaxPpermuteBackend(overlap_fused=True)
+        p = alltoall_program(layout, pipelined=1)
     else:
         be = JaxPpermuteBackend(overlap=(strategy == "overlap"))
         p = ropt.optimize(prog) if strategy == "fused" else prog
@@ -433,9 +550,14 @@ class Autotuner:
     # ------------------------------------------------------------ decide
     def decide(self, kind: str, layout=None, nbytes: int = 0,
                dtype: str = "float32", site: str = "global", grid=None,
-               emulated: bool = False) -> Decision:
+               emulated: bool = False, compute_us: int = 0) -> Decision:
         """The cheapest strategy for one call site key. Deterministic for a
-        warm cache: same key -> same decision, no re-measurement."""
+        warm cache: same key -> same decision, no re-measurement.
+
+        ``compute_us`` (per-device µs of compute fused into the site's
+        round trip, e.g. the MoE expert FFN) keys and prices the decision
+        as a full dispatch+compute+combine pipeline: sequential strategies
+        pay the sum, ``overlap_fused`` the overlapped max."""
         if kind == "matmul":
             if grid is None:
                 raise ValueError("matmul decisions need grid=(K, M)")
@@ -449,12 +571,14 @@ class Autotuner:
                 raise ValueError(f"{kind} decisions need a DeviceLayout")
             topo = layout.topo
         key = TuneKey(kind, topo.K, topo.M, bucket_bytes(nbytes),
-                      str(np.dtype(dtype)), site)
+                      str(np.dtype(dtype)), site,
+                      bucket_compute_us(compute_us), emulated)
         if key in self._memo:
             return self._memo[key]
 
         cands = candidates(kind, site, emulated=emulated)
-        analytic = analytic_prices(kind, layout, key.nbytes, cands, grid)
+        analytic = analytic_prices(kind, layout, key.nbytes, cands, grid,
+                                   key.compute_us)
         rounds, hops = priced_rounds(kind, layout, grid)
 
         if self.force is not None:
@@ -493,7 +617,8 @@ class Autotuner:
             for s in cands:
                 try:
                     fn = _measure_closure(key.kind, key.site, s, layout, grid,
-                                          key.nbytes, key.dtype)
+                                          key.nbytes, key.dtype,
+                                          key.compute_us)
                 except Exception:
                     fn = None
                 if fn is not None:
@@ -544,6 +669,18 @@ def set_autotuner(tuner: Autotuner | None) -> None:
 # Config-level reports (serve.engine / launch.dryrun)
 # ---------------------------------------------------------------------------
 
+def moe_compute_us(E_loc: int, c_loc: int, n_model: int, d_model: int,
+                   d_ff: int) -> int:
+    """Estimated per-device µs of the MoE expert FFN fused into a dispatch
+    round trip: each device contracts n_model arriving (E_loc, c_loc,
+    d_model) capacity chunks through the silu-gated FFN — three einsums,
+    ~6·tokens·d·f flops — at the proxy ``COMPUTE_RATE``. Shared by
+    ``models.moe.moe_apply_ep`` and ``moe_site_report`` so both key the
+    same tuner decision."""
+    flops = 6.0 * E_loc * c_loc * n_model * d_model * d_ff
+    return int(flops / COMPUTE_RATE * 1e6)
+
+
 def moe_site_report(cfg, rules, n_tokens: int, dtype: str = "float32",
                     tuner: Autotuner | None = None) -> dict:
     """Chosen strategy + priced rounds for a config's MoE EP dispatch site.
@@ -567,7 +704,10 @@ def moe_site_report(cfg, rules, n_tokens: int, dtype: str = "float32",
     c_loc = max(8, int(m.capacity_factor * t_loc * m.top_k / E))
     c_loc = -(-c_loc // 8) * 8
     chunk = (E // n_model) * c_loc * cfg.d_model * np.dtype(dtype).itemsize
-    dec = tuner.decide("alltoall", layout, chunk, dtype=dtype, site="shard")
+    dec = tuner.decide(
+        "alltoall", layout, chunk, dtype=dtype, site="shard",
+        compute_us=moe_compute_us(E // n_model, c_loc, n_model, cfg.d_model,
+                                  m.d_ff_expert))
     return {
         "status": "ok",
         "kind": "alltoall",
@@ -580,6 +720,8 @@ def moe_site_report(cfg, rules, n_tokens: int, dtype: str = "float32",
         "predicted_us": round(dec.predicted_us, 1),
         "analytic_us": {k: round(v, 1) for k, v in dec.analytic_us.items()},
         "measured_us": {k: round(v, 1) for k, v in dec.measured_us.items()},
-        "moe_collectives": {"xla": "xla", "loop": "dragonfly",
-                            "overlap": "dragonfly_overlap"}[dec.strategy],
+        "moe_collectives": {
+            "xla": "xla", "loop": "dragonfly",
+            "overlap": "dragonfly_overlap",
+            "overlap_fused": "dragonfly_overlap_fused"}[dec.strategy],
     }

@@ -10,10 +10,14 @@ to the strategy's executor —
   * ``fused``         the ``optimize()`` table replay
   * ``pallas_fused``  the Pallas-kernel backend
   * ``xla``           the fused XLA collective (``lax.all_to_all``/``psum``)
+  * ``overlap_fused`` the wave-ordered fused-table pipeline (all-to-all:
+    single gather/scatter dispatch, and the fused dispatch+compute+combine
+    round trip of ``alltoall_compute``)
 
 Whole-array ``run_*`` calls tune at ``site="global"``; the per-shard
 methods (valid inside a caller's shard_map, e.g. MoE dispatch) tune at
-``site="shard"`` where the structural candidates are xla/loop/overlap.
+``site="shard"`` where the structural candidates are xla/loop/overlap
+(+ overlap_fused for all-to-all).
 Results are bit-identical across strategies (the backend contract), so
 the tuner is free to switch on speed alone. Decisions are made in Python
 at trace time — a jitted caller retraces only when the decision (a cache
@@ -36,12 +40,21 @@ from repro.runtime import optimize as _opt
 from repro.runtime.program import CollectiveProgram, check_kind as _check_kind
 
 
-def _chunk_bytes(x, kind: str) -> int:
-    """Message bytes at this site: per-destination chunk for all-to-all,
-    the full per-device vector otherwise."""
+def _chunk_bytes(x, kind: str, site: str = "shard") -> int:
+    """Message bytes at this site: per-destination capacity chunk for
+    all-to-all, the full per-device vector otherwise.
+
+    The all-to-all chunk is ``site``-dependent because the buffers differ
+    by a device axis: a shard-site ``x`` is (n, chunk...) so one leading
+    dim strips to the chunk, while a global ``x`` is (n, n, chunk...) —
+    dividing by ``x.shape[0]`` alone would key the tuner on the n-times
+    larger full per-device buffer, a different bucket than the
+    per-destination bytes ``_measure_closure`` times and ``models.moe``
+    keys for the same exchange."""
     itemsize = np.dtype(x.dtype).itemsize
     if kind == "alltoall":
-        return max(1, int(x.size) // max(1, x.shape[0])) * itemsize
+        div = x.shape[0] * (x.shape[1] if site == "global" else 1)
+        return max(1, int(x.size) // max(1, div)) * itemsize
     return int(x.size) * itemsize
 
 
@@ -84,13 +97,13 @@ class AutoBackend:
         return self.tuner if self.tuner is not None else _at.get_autotuner()
 
     def _decide(self, kind: str, program: CollectiveProgram, nbytes: int,
-                dtype, site: str) -> _at.Decision:
+                dtype, site: str, compute_us: int = 0) -> _at.Decision:
         emulated = program.active_devices is not None
         grid = program.grid if kind == "matmul" else None
         layout = _at.layout_for(program.n)
         return self._tuner().decide(
             kind, layout, nbytes, dtype=str(dtype), site=site, grid=grid,
-            emulated=emulated)
+            emulated=emulated, compute_us=compute_us)
 
     def _delegate(self, strategy: str, program):
         """(backend instance, program form) for a non-xla strategy."""
@@ -101,6 +114,8 @@ class AutoBackend:
             from repro.runtime.backends.pallas_fused import PallasFusedBackend
 
             return PallasFusedBackend(), prog
+        if strategy == "overlap_fused":
+            return JaxPpermuteBackend(overlap_fused=True), prog
         be = JaxPpermuteBackend(overlap=(strategy == "overlap"))
         return be, (_opt.optimize(prog) if strategy == "fused" else prog)
 
@@ -109,7 +124,7 @@ class AutoBackend:
         """Analytic decisions can name a mesh-backed strategy the process
         cannot run (too few devices) — degrade to the fused global replay,
         which runs anywhere."""
-        if dec.strategy in ("loop", "overlap", "xla"):
+        if dec.strategy in ("loop", "overlap", "xla", "overlap_fused"):
             import jax
 
             if jax.device_count() < n:
@@ -120,7 +135,8 @@ class AutoBackend:
     def _run(self, kind: str, x, program, *run_args, **run_kw):
         prog = _opt.as_program(program)
         _check_kind(prog, kind)
-        dec = self._decide(kind, prog, _chunk_bytes(x, kind), x.dtype, "global")
+        dec = self._decide(kind, prog, _chunk_bytes(x, kind, "global"),
+                           x.dtype, "global")
         strategy = self._global_strategy(dec, prog.n)
         if strategy == "xla":
             return _xla_collective(kind, prog.n, "df", prog.root or 0)(x)
@@ -167,6 +183,32 @@ class AutoBackend:
             return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0)
         be, p = self._delegate(dec.strategy, prog)
         return be.alltoall(x, axis_name, p)
+
+    def alltoall_compute(self, x, axis_name: str, program: CollectiveProgram,
+                         compute=None, compute_us: int = 0):
+        """Fused round trip out[j] = compute_j(x[j]) (see the ppermute
+        backend's ``alltoall_compute``), tuned as a full pipeline when the
+        caller passes its ``compute_us`` estimate. Strategies other than
+        ``overlap_fused`` fall back to the bit-identical sequential form:
+        dispatch all-to-all, one batched ``compute`` over all n arrivals,
+        combine all-to-all."""
+        import jax
+
+        prog = _opt.as_program(program)
+        _check_kind(prog, "alltoall")
+        dec = self._decide("alltoall", prog, _chunk_bytes(x, "alltoall"),
+                           x.dtype, "shard", compute_us)
+        if dec.strategy == "overlap_fused":
+            be, p = self._delegate(dec.strategy, prog)
+            return be.alltoall_compute(x, axis_name, p, compute)
+        if dec.strategy == "xla":
+            a2a = lambda v: jax.lax.all_to_all(
+                v, axis_name, split_axis=0, concat_axis=0)
+        else:
+            be, p = self._delegate(dec.strategy, prog)
+            a2a = lambda v: be.alltoall(v, axis_name, p)
+        recv = a2a(x)
+        return a2a(recv if compute is None else compute(recv))
 
     def allreduce(self, x, axis_name: str, program: CollectiveProgram):
         import jax

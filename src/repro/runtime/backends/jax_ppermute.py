@@ -73,11 +73,22 @@ from repro.runtime.program import (
 class JaxPpermuteBackend:
     """One ppermute per communication stage on a 1-D router-order axis.
 
+    ``overlap_fused=True`` replays all-to-alls through the wave-ordered
+    fused-table dispatch: ONE gather of every outgoing chunk up front
+    (stacked-σ table in ``start_step`` order), the per-stage ppermutes
+    issued wave by wave, and ONE scatter of every arrival at the end — no
+    per-stage dynamic-update-slice chain, which is what the sequential
+    ``loop`` replay pays 16× over on a host mesh. The same wave order
+    drives ``alltoall_compute``, the §3 Schedules 1–3 pipeline where the
+    expert compute for wave w-1's arrivals trails one wave behind wave w's
+    dispatch.
+
     ``donate=True`` donates the whole-array wrapper inputs to XLA (callers
     must not reuse the passed buffers afterwards)."""
 
     overlap: bool = False
     donate: bool = False
+    overlap_fused: bool = False
     name: str = "jax_ppermute"
 
     # ---------------------------------------------------------- per-shard
@@ -100,6 +111,18 @@ class JaxPpermuteBackend:
         if x.shape[0] != program.n:
             raise ValueError(f"leading dim {x.shape[0]} != mesh axis {program.n}")
         idx = jax.lax.axis_index(axis_name)
+        if self.overlap_fused:
+            order = [st for w in _wave_stages(program) for st in w]
+            sig = jnp.asarray(np.stack([st.sigma_np for st in order]))
+            inv = jnp.asarray(np.stack([st.inverse_np for st in order]))
+            all_sel = x[sig[:, idx]]  # ONE gather of every outgoing chunk
+            recvs = [
+                jax.lax.ppermute(all_sel[k], axis_name, st.pairs)
+                for k, st in enumerate(order)
+            ]
+            # ONE scatter: arrivals of idle emulated devices are the zeros
+            # ppermute hands non-destinations, written at their own row.
+            return jnp.zeros_like(x).at[inv[:, idx]].set(jnp.stack(recvs))
         out = jnp.zeros_like(x)
         for op in self._ordered(program):
             assert isinstance(op, Perm)
@@ -109,6 +132,65 @@ class JaxPpermuteBackend:
             recv = jax.lax.ppermute(sel, axis_name, op.pairs)
             out = out.at[inv[idx]].set(recv)
         return out
+
+    def alltoall_compute(
+        self,
+        x: jax.Array,
+        axis_name: str,
+        program: CollectiveProgram,
+        compute=None,
+    ) -> jax.Array:
+        """Fused round trip: ship chunk x[j] to device j, apply device j's
+        ``compute`` there, return the processed chunk to its sender.
+
+        out[j] = compute_j(x[j]) — NOT the all-to-all transpose; with
+        ``compute=None`` this is the identity round trip. ``compute`` is
+        THIS device's batched chunk transform: called as compute(chunks)
+        with chunks (V, ...), the stacked arrivals of one launch wave.
+
+        Waves follow the program's ``start_step`` stamps (§3 Schedules 1-3
+        pipelining): wave w's ppermutes are issued BEFORE wave w-1's
+        arrivals go through ``compute`` and return over the inverse pairs,
+        so the contraction for already-arrived chunks overlaps the next
+        wave's network time. ONE gather feeds every dispatch and ONE
+        scatter commits every return; the ``pending`` double buffer holds
+        exactly one wave of arrivals between issue and drain. Barrier
+        (unstamped) programs degenerate to a single wave — all compute
+        after all dispatch — so pass a pipelined lowering to overlap."""
+        program = _opt.as_program(program)
+        _check_kind(program, "alltoall")
+        if x.shape[0] != program.n:
+            raise ValueError(f"leading dim {x.shape[0]} != mesh axis {program.n}")
+        waves = _wave_stages(program)
+        order = [st for w in waves for st in w]
+        idx = jax.lax.axis_index(axis_name)
+        sig = jnp.asarray(np.stack([st.sigma_np for st in order]))
+        dests = sig[:, idx]  # stage k ships this device's chunk for σ_k(idx)
+        all_sel = x[dests]
+        backs: list = [None] * len(order)
+
+        def drain(pending):
+            if not pending:
+                return
+            stacked = jnp.stack([r for _, r in pending])
+            ys = stacked if compute is None else compute(stacked)
+            for j, (k, _) in enumerate(pending):
+                inv_pairs = tuple((d, s) for s, d in order[k].pairs)
+                backs[k] = jax.lax.ppermute(ys[j], axis_name, inv_pairs)
+
+        pending: list = []
+        k = 0
+        for wave in waves:
+            newly = []
+            for st in wave:
+                newly.append((k, jax.lax.ppermute(all_sel[k], axis_name, st.pairs)))
+                k += 1
+            drain(pending)
+            pending = newly
+        drain(pending)
+        # Idle emulated devices: dests == idx, backs are ppermute zeros —
+        # their row is written with zeros and every other row stays zero.
+        return jnp.zeros_like(x).at[dests].set(jnp.stack(backs))
 
     def allreduce(self, x: jax.Array, axis_name: str, program: CollectiveProgram) -> jax.Array:
         """Recursive-doubling all-reduce (sum): one pairwise exchange per
@@ -222,9 +304,38 @@ class JaxPpermuteBackend:
         do not apply on that path (``donate`` still does)."""
         if isinstance(program, _opt.OptimizedProgram):
             _check_kind(program.program, "alltoall")
+            if self.overlap_fused:
+                return _opt.jax_alltoall_overlapped(
+                    program, donate=self.donate)(x_global)
             return _opt.jax_alltoall(program, self.donate)(x_global)
         return _compiled_collective(self, program, "alltoall", axis_name, mesh,
                                     False)(x_global)
+
+    def run_alltoall_compute(
+        self,
+        x_global,
+        program,
+        compute=None,
+        weights=(),
+        axis_name: str = "df",
+        mesh: Mesh | None = None,
+    ):
+        """x_global: (n, n, ...) with x_global[i, j] the chunk device i sends
+        to device j; returns out[i, j] = compute_j(x_global[i, j]) — every
+        chunk processed AT its destination j and returned to its sender
+        (round trip), NOT the all-to-all transpose.
+
+        ``compute(chunks, *wl)`` runs per shard: chunks is one wave's (V,
+        ...) stacked arrivals and ``wl`` holds the device's row of every
+        array in ``weights`` (each (n, ...), sharded over the axis). The
+        jitted shard_map closure is cached per (backend, program, compute,
+        arity) — pass a stable ``compute`` callable, not a per-call lambda,
+        to reuse the compiled executable."""
+        prog = _opt.as_program(program)
+        _check_kind(prog, "alltoall")
+        return _compiled_alltoall_compute(
+            self, prog, compute, len(weights), axis_name, mesh
+        )(x_global, *weights)
 
     def run_allreduce(
         self, x_global, program, axis_name: str = "df", mesh: Mesh | None = None
@@ -269,6 +380,43 @@ class JaxPpermuteBackend:
         if prog.grid is None:
             raise ValueError("matmul program lacks grid metadata")
         return _compiled_matmul(self, program, axis_name, mesh)(B, A)
+
+
+@functools.lru_cache(maxsize=None)
+def _wave_stages(program: CollectiveProgram) -> tuple[tuple[Perm, ...], ...]:
+    """Stages grouped by launch wave — one tuple per distinct ``start_step``
+    value, waves in launch order, stage order preserved inside a wave.
+    Barrier (unstamped) programs collapse to a single wave. Mirrors
+    ``core.alltoall.wave_rounds`` at the lowered-program level."""
+    waves: dict[int, list[Perm]] = {}
+    for st in program.pipelined_stages():
+        assert isinstance(st, Perm)
+        waves.setdefault(st.start_step, []).append(st)
+    return tuple(tuple(waves[s]) for s in sorted(waves))
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_alltoall_compute(backend: JaxPpermuteBackend,
+                               program: CollectiveProgram, compute,
+                               n_weights: int, axis_name: str,
+                               mesh: Mesh | None):
+    """Jitted shard_map closure for the fused dispatch+compute round trip,
+    cached per (backend, program, compute, weight arity, axis, mesh)."""
+    _check_kind(program, "alltoall")
+    mesh = mesh or _axis_mesh(program.n, axis_name)
+
+    def local(s, *ws):
+        wl = [w[0] for w in ws]
+        fn = None if compute is None else (lambda chunks: compute(chunks, *wl))
+        return backend.alltoall_compute(s[0], axis_name, program, fn)[None]
+
+    f = compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis_name),) * (1 + n_weights),
+        out_specs=P(axis_name),
+    )
+    donate = (0,) if backend.donate else ()
+    return jax.jit(f, donate_argnums=donate)
 
 
 @functools.lru_cache(maxsize=None)

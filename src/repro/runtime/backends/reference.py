@@ -86,6 +86,33 @@ class NumpyReferenceBackend:
         _assert_idle_untouched(program, out, np.zeros_like(out), axes=(0, 1))
         return out
 
+    def run_alltoall_compute(
+        self, x: np.ndarray, program: CollectiveProgram, compute=None
+    ) -> np.ndarray:
+        """Fused dispatch+compute round trip, ground truth for the JAX
+        backend's ``alltoall_compute``: every chunk x[i, j] is processed AT
+        its destination j and returned to sender i, so
+        out[i, j] = compute_j(x[i, j]) — NOT the all-to-all transpose.
+        ``compute(d, chunks)`` maps destination id d and the (k, ...) stack
+        of chunks arriving there to the processed (k, ...) stack;
+        ``compute=None`` is the identity round trip.
+
+        Emulated programs: only active (i, j) slots are processed; rows and
+        columns of idle devices stay zero (asserted)."""
+        program = _opt.as_program(program)
+        _check_kind(program, "alltoall")
+        n = program.n
+        if x.shape[0] != n or x.shape[1] != n:
+            raise ValueError(f"expected leading dims ({n}, {n}), got {x.shape}")
+        act = (np.flatnonzero(program.active_mask_np)
+               if program.active_devices is not None else np.arange(n))
+        out = np.zeros_like(x)
+        for j in act:
+            chunks = x[act, j]
+            out[act, j] = chunks if compute is None else compute(int(j), chunks)
+        _assert_idle_untouched(program, out, np.zeros_like(out), axes=(0, 1))
+        return out
+
     # ----------------------------------------------------------- allreduce
     def run_allreduce(self, x: np.ndarray, program: CollectiveProgram) -> np.ndarray:
         """x: (n, ...) -> (n, ...) with every active row the sum over active

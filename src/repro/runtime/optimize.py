@@ -77,10 +77,18 @@ class FusedExchange:
     ``out[dst[t], src[t]] = x[src[t], dst[t]]`` for every pair t. Valid
     because every stage reads the immutable input and the full exchange
     delivers each ordered (src, dst) chunk exactly once — so the whole
-    program is one batched permute, independent of replay order."""
+    program is one batched permute, independent of replay order.
+
+    ``starts[t]`` is the pair's pipelined launch stamp (the owning stage's
+    ``start_step``, itself the Schedule-1..3 launch from
+    ``core.alltoall.round_starts``). Slicing the table by distinct starts
+    (``exchange_waves``) recovers the wave-by-wave issue order the
+    ``overlap_fused`` replay dispatches — all zeros for barrier schedules,
+    where the whole exchange is one wave."""
 
     src: np.ndarray  # (T,) int32 senders, concatenated over stages
     dst: np.ndarray  # (T,) int32 receivers
+    starts: np.ndarray | None = None  # (T,) int32 pipelined launch stamps
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -189,7 +197,11 @@ def _build_alltoall(program: CollectiveProgram) -> tuple[FusedOp, ...]:
     assert all(isinstance(st, Perm) for st in program.comm_stages)
     src = np.concatenate([st.src_np for st in program.comm_stages])
     dst = np.concatenate([st.dst_np for st in program.comm_stages])
-    return (FusedExchange(src.astype(np.int32), dst.astype(np.int32)),)
+    starts = np.concatenate([
+        np.full(len(st.src_np), st.start_step, np.int32)
+        for st in program.comm_stages
+    ])
+    return (FusedExchange(src.astype(np.int32), dst.astype(np.int32), starts),)
 
 
 def _build_allreduce(program: CollectiveProgram) -> tuple[FusedOp, ...]:
@@ -380,6 +392,86 @@ def jax_alltoall(opt: OptimizedProgram, donate: bool = False):
 
     def replay(x):
         return jnp.zeros_like(x).at[dst, src].set(x[src, dst])
+
+    return jax.jit(replay, donate_argnums=_donate(donate))
+
+
+@functools.lru_cache(maxsize=None)
+def exchange_waves(opt: OptimizedProgram) -> tuple[tuple[int, np.ndarray, np.ndarray], ...]:
+    """The fused §3 exchange table sliced per launch wave: one
+    ``(start_step, src, dst)`` triple per distinct ``FusedExchange.starts``
+    value, in launch order. Barrier programs yield a single wave (the whole
+    table); a ``pipelined_schedule`` program yields one slice per
+    Schedule-1..3 launch stamp (``core.alltoall.round_starts``) — the issue
+    order of the ``overlap_fused`` replays below and in the jax_ppermute
+    backend. Wave slices never split a stage: stamps are per stage, so a
+    stage's pairs always land in one wave."""
+    (op,) = opt.ops
+    starts = (op.starts if op.starts is not None
+              else np.zeros(len(op.src), np.int32))
+    out = []
+    for s in np.unique(starts):
+        sel = starts == s
+        out.append((int(s), op.src[sel].copy(), op.dst[sel].copy()))
+    return tuple(out)
+
+
+def _wave_tables(opt: OptimizedProgram) -> tuple[np.ndarray, np.ndarray]:
+    """(W, V) src/dst scan tables, one row per wave, narrow waves padded by
+    REPEATING their first pair — a repeated (src, dst) scatters the same
+    value to the same slot, so padding cannot perturb results (no masked
+    adds that would rewrite -0.0)."""
+    waves = exchange_waves(opt)
+    v = max(len(s) for _, s, _ in waves)
+    src = np.stack([np.resize(s, v) for _, s, _ in waves]).astype(np.int32)
+    dst = np.stack([np.resize(d, v) for _, _, d in waves]).astype(np.int32)
+    return src, dst
+
+
+@functools.lru_cache(maxsize=None)
+def jax_alltoall_overlapped(opt: OptimizedProgram, compute=None,
+                            donate: bool = False):
+    """Wave-by-wave replay of the fused exchange as a ``lax.scan`` with a
+    DOUBLE-BUFFERED carry: wave w's table rows ride the carry as the
+    *pending* buffer while the scan body commits wave w-1's already-arrived
+    chunks — the §3 Schedules 1–3 launch overlap, projected onto the global
+    array. The final pending wave drains after the scan.
+
+    Without ``compute`` this is the one-way exchange, bit-identical to
+    ``jax_alltoall``: ``out[dst, src] = x[src, dst]``. With a ``compute``
+    the replay is the full dispatch→process→combine ROUND TRIP:
+    ``out[src, dst] = compute(x[src, dst], dst)`` — the chunk travels to
+    ``dst``, is processed by the destination's function, and returns to its
+    sender (the MoE expert pipeline in one fused collective).
+    ``compute(chunks, dst_ids)`` takes the wave's stacked (V, ...) chunks
+    and their (V,) destination device ids (to select per-destination
+    parameters) and returns the processed (V, ...) stack."""
+    import jax
+    import jax.numpy as jnp
+
+    src_t, dst_t = _wave_tables(opt)
+    src_j, dst_j = jnp.asarray(src_t), jnp.asarray(dst_t)
+
+    def commit(out, x, psrc, pdst):
+        if compute is None:
+            return out.at[pdst, psrc].set(x[psrc, pdst])
+        return out.at[psrc, pdst].set(compute(x[psrc, pdst], pdst))
+
+    def replay(x):
+        out = jnp.zeros_like(x)
+        # pending wave: the previous iteration's (src, dst) rows. Seeded
+        # with wave 0's own rows and has_pending=False so the first body
+        # commits nothing.
+        def body(carry, tables):
+            out, psrc, pdst, has_pending = carry
+            # wave w "dispatches" by riding the carry; its commit is
+            # deferred one iteration (the double buffer)
+            out = jnp.where(has_pending, commit(out, x, psrc, pdst), out)
+            return (out, tables[0], tables[1], jnp.bool_(True)), None
+
+        carry0 = (out, src_j[0], dst_j[0], jnp.bool_(False))
+        (out, psrc, pdst, _), _ = jax.lax.scan(body, carry0, (src_j, dst_j))
+        return commit(out, x, psrc, pdst)  # drain the last pending wave
 
     return jax.jit(replay, donate_argnums=_donate(donate))
 

@@ -42,16 +42,18 @@ def main():
     x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)) * 0.1, jnp.float32)
 
     outs = {}
-    for mode in ("xla", "dragonfly", "dragonfly_overlap", "auto"):
+    for mode in ("xla", "dragonfly", "dragonfly_overlap",
+                 "dragonfly_overlap_fused", "auto"):
         rules = dataclasses.replace(base, moe_collectives=mode)
         SH.set_active(rules, mesh)
         y, aux = MOE.moe_apply_ep(params, x, cfg)
         outs[mode] = (np.asarray(y), float(aux))
         print(f"{mode}: aux={outs[mode][1]:.6f}")
 
-    # the tuner may pick ANY of the three strategies — all must agree, so
+    # the tuner may pick ANY of the four strategies — all must agree, so
     # "auto" is bit-exact against every fixed path (zero tolerance)
-    for mode in ("xla", "dragonfly", "dragonfly_overlap"):
+    for mode in ("xla", "dragonfly", "dragonfly_overlap",
+                 "dragonfly_overlap_fused"):
         np.testing.assert_array_equal(outs["auto"][0], outs[mode][0])
         assert outs["auto"][1] == outs[mode][1], (mode, outs)
 

@@ -1,12 +1,14 @@
-"""64-device scale smoke — run as a SUBPROCESS with
-XLA_FLAGS=--xla_force_host_platform_device_count=64 (set before jax
+"""Scale smoke — run as a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count=256 (set before jax
 import, see test_autotune.py and the CI scale step). D3(4,4) doubly-
 parallel all-to-all plus the Theorem-2 matmul on grid (2,4) — K²M² = 64
-devices — both bit-exact against ground truth. Exits 0 on success."""
+devices — and, when the process has 256 devices, the grid-(4,4) matmul
+(D3(16,4), K²M² = 256 routers). All bit-exact against ground truth.
+Exits 0 on success."""
 
 import os
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=64")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=256")
 
 import jax
 import jax.numpy as jnp
@@ -71,8 +73,42 @@ def check_matmul_64():
     print("Theorem-2 matmul grid (2,4) OK (64 devices, bit-exact)")
 
 
+def check_matmul_256():
+    # Theorem 2 grid (K, M) = (4, 4): K²M² = 256 devices — the largest
+    # forced-host mesh the CI scale job exercises. b=2 keeps the compile
+    # a few seconds while still blocking (32×32 matrix, 16 rounds).
+    from repro.core.matmul import MatmulGrid, gather_blocks, scatter_blocks
+
+    K, M = 4, 4
+    grid = MatmulGrid(K, M)
+    prog = coll.matmul_program(K, M)
+    assert prog.n == 256, prog.n
+    mesh = get_mesh(256)
+    b = 2
+    rng = np.random.default_rng(5)
+    side = grid.n * b
+    Bmat = rng.integers(-4, 5, (side, side)).astype(np.float32)
+    Amat = rng.integers(-4, 5, (side, side)).astype(np.float32)
+    bb = jnp.asarray(scatter_blocks(grid, Bmat))
+    aa = jnp.asarray(scatter_blocks(grid, Amat))
+
+    f = jax.jit(
+        shard_map(
+            lambda p, q: coll.dragonfly_matmul(p[0], q[0], "x", (K, M))[None],
+            mesh=mesh, in_specs=(P("x"), P("x")), out_specs=P("x"),
+        )
+    )
+    got = gather_blocks(grid, np.asarray(f(bb, aa)))
+    np.testing.assert_array_equal(got, Bmat @ Amat)
+    print("Theorem-2 matmul grid (4,4) OK (256 devices, bit-exact)")
+
+
 if __name__ == "__main__":
     assert jax.device_count() >= 64, jax.device_count()
     check_all_to_all_64()
     check_matmul_64()
+    if jax.device_count() >= 256:
+        check_matmul_256()
+    else:
+        print("skipping grid (4,4): need 256 devices, have", jax.device_count())
     print("ALL SCALE CHECKS PASSED")

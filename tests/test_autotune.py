@@ -63,6 +63,92 @@ def test_analytic_prices_scale_with_bytes():
     assert all(large[s] > small[s] for s in small)
 
 
+# ------------------------------------------- compute-keyed pipeline tuning
+def test_candidates_overlap_fused_alltoall_shard_only():
+    assert "overlap_fused" in at.candidates("alltoall", "shard")
+    # still offered when the program is emulated (xla is not)
+    assert "overlap_fused" in at.candidates("alltoall", "shard", emulated=True)
+    assert "overlap_fused" not in at.candidates("allreduce", "shard")
+    assert "overlap_fused" not in at.candidates("alltoall", "global")
+    assert "overlap_fused" not in at.candidates("alltoall", "host")
+
+
+def test_tunekey_compute_us_suffix_backward_compatible():
+    """compute_us == 0 must format exactly as the pre-pipeline key so the
+    existing schema-1 cache entries keep resolving."""
+    k0 = at.TuneKey("alltoall", 2, 2, 1024, "float32", "shard")
+    assert str(k0) == "alltoall|K2M2|b1024|float32|shard"
+    k1 = at.TuneKey("alltoall", 2, 2, 1024, "float32", "shard", 512)
+    assert str(k1) == "alltoall|K2M2|b1024|float32|shard|c512"
+    assert k0 != k1
+    k2 = at.TuneKey("alltoall", 2, 2, 1024, "float32", "shard", 512, True)
+    assert str(k2) == "alltoall|K2M2|b1024|float32|shard|c512|emu"
+
+
+def test_emulated_site_never_reuses_native_xla_decision(tmp_path):
+    """Regression: ``emulated`` is part of the TuneKey. A native decision
+    (possibly xla) memoized/cached for the same shapes must not be replayed
+    at an emulated site, where the fused op would mix idle devices."""
+    lay = at.layout_for(4)
+    t = at.Autotuner(cache_path=tmp_path / "c.json", mode="analytic")
+    d_native = t.decide("alltoall", lay, 256, site="shard")
+    d_emu = t.decide("alltoall", lay, 256, site="shard", emulated=True)
+    assert d_native.key != d_emu.key
+    assert d_emu.key.emulated and str(d_emu.key).endswith("|emu")
+    assert d_emu.strategy != "xla"
+    assert "xla" not in d_emu.analytic_us
+    # same shapes again: each variant replays its own memoized decision
+    assert t.decide("alltoall", lay, 256, site="shard") is d_native
+    assert t.decide("alltoall", lay, 256, site="shard", emulated=True) is d_emu
+
+
+def test_bucket_compute_us():
+    assert at.bucket_compute_us(0) == 0
+    assert at.bucket_compute_us(1) == 1
+    assert at.bucket_compute_us(2) == 2
+    assert at.bucket_compute_us(3) == 4
+    assert at.bucket_compute_us(300) == 512
+    assert at.bucket_compute_us(25165) == 32768
+
+
+def test_analytic_overlap_fused_discount():
+    """With a large compute term the sequential strategies pay
+    2·wire + compute while overlap_fused pays ~max(wire, compute): the
+    overlap discount must rank it strictly cheaper."""
+    lay = at.layout_for(8)
+    pr = at.analytic_prices("alltoall", lay, 65536,
+                            at.candidates("alltoall", "shard"),
+                            compute_us=10_000)
+    assert pr["overlap_fused"] < pr["loop"]
+    assert pr["overlap_fused"] < pr["xla"]
+    # without compute there is no round trip to hide: prices stay in the
+    # plain-dispatch regime (overlap_fused ~ pipelined wire + group costs)
+    pr0 = at.analytic_prices("alltoall", lay, 65536,
+                             at.candidates("alltoall", "shard"))
+    assert pr0["overlap_fused"] < pr["overlap_fused"]
+
+
+def test_moe_compute_us_scales_with_ffn_flops():
+    base = at.moe_compute_us(2, 32, 16, 64, 128)
+    assert base > 0
+    assert at.moe_compute_us(2, 32, 16, 64, 256) == pytest.approx(2 * base, abs=2)
+    assert at.moe_compute_us(4, 32, 16, 64, 128) == pytest.approx(2 * base, abs=2)
+
+
+def test_chunk_bytes_site_dependent():
+    """Regression for the shard-site byte-bucketing fix: a global buffer
+    (n, n, chunk) must key on the per-destination capacity chunk, not the
+    n-times larger per-device buffer."""
+    from repro.runtime.backends.auto import _chunk_bytes
+
+    x_shard = np.zeros((8, 16, 4), np.float32)
+    x_glob = np.zeros((8, 8, 16, 4), np.float32)
+    assert _chunk_bytes(x_shard, "alltoall") == 16 * 4 * 4
+    assert _chunk_bytes(x_glob, "alltoall", "global") == 16 * 4 * 4
+    # non-alltoall kinds key on the full per-device vector
+    assert _chunk_bytes(x_shard, "allreduce") == x_shard.size * 4
+
+
 # -------------------------------------------------- satellite 4: determinism
 def test_warm_cache_same_key_same_decision(tmp_path):
     lay = at.layout_for(4)
@@ -207,8 +293,9 @@ def test_moe_site_report_shapes(tmp_path):
     tuner = at.Autotuner(cache_path=tmp_path / "c.json", mode="analytic")
     rep = at.moe_site_report(cfg, rules, n_tokens=128, tuner=tuner)
     assert rep["status"] == "ok"
-    assert rep["strategy"] in ("xla", "loop", "overlap")
-    assert rep["moe_collectives"] in ("xla", "dragonfly", "dragonfly_overlap")
+    assert rep["strategy"] in ("xla", "loop", "overlap", "overlap_fused")
+    assert rep["moe_collectives"] in (
+        "xla", "dragonfly", "dragonfly_overlap", "dragonfly_overlap_fused")
     assert rep["rounds"] >= 1 and rep["priced_hops"] > 0
 
 
