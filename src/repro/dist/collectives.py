@@ -151,12 +151,17 @@ def matmul_program(
 def concurrent_program(
     kind: str, embeddings: tuple[Embedding, ...],
     *, roots: tuple[int, ...] | None = None, optimized: bool = False,
+    pipelined: int = 0,
 ) -> CollectiveProgram:
     """One combined host program multiplexing every embedding's guest
     ``kind`` collective (``runtime.combine.combine`` of the cached
     per-guest rewrites). ``roots`` gives each broadcast guest its own
     root (guest device ids, default 0). ``optimized=True`` returns the
-    fused-table form — the stacked-σ tables then span all guests."""
+    fused-table form — the stacked-σ tables then span all guests.
+    ``pipelined`` (alltoall guests only) combines each guest's
+    Schedule-``offset`` pipelined variant, so the combined program's stages
+    keep real launch stamps for the overlapped executors — this is the form
+    the multi-tenant serving fleet replays at every MoE boundary."""
     from repro.runtime.combine import combine
 
     if roots is not None and len(roots) != len(embeddings):
@@ -165,7 +170,7 @@ def concurrent_program(
     for gi, emb in enumerate(embeddings):
         layout = DeviceLayout(emb.guest)
         if kind == "alltoall":
-            guests.append(alltoall_program(layout, emb))
+            guests.append(alltoall_program(layout, emb, pipelined=pipelined))
         elif kind == "allreduce":
             guests.append(allreduce_program(layout, emb))
         elif kind == "broadcast":

@@ -212,3 +212,45 @@ def decode_step(params, cache, batch, position, cfg: ModelConfig, unroll: bool =
     h = _norm_f(cfg)(params["final_norm"], x)
     logits = _unembed(params, h, cfg)
     return logits[:, 0], new_cache
+
+
+def decode_step_staged(params, cache, batch, position, cfg: ModelConfig):
+    """Generator twin of ``decode_step`` that pauses at every MoE boundary.
+
+    Same contract as ``decode_step`` — but instead of computing expert FFNs
+    inline it delegates to ``transformer.stack_decode_staged``, yielding
+    ``(ffn_params, h2)`` at each MoE member and expecting the expert output
+    sent back. Drive it with ``next()`` / ``gen.send(y)``; the final
+    ``StopIteration.value`` is ``(logits (B, vocab), new_cache)``.
+
+    The dense prefix (deepseek ``first_dense_layers``) has no MoE members
+    and runs eagerly up front; mixers inside the stack run jitted. This is
+    the forward the multi-tenant ``serve.fleet`` engines use so N tenants'
+    expert dispatches can share one combined host program per boundary.
+    """
+    if cfg.embeds_input and "embed" in batch:
+        x = batch["embed"][:, None].astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = L.embed_apply(params["embed"], batch["token"][:, None]).astype(
+            jnp.dtype(cfg.compute_dtype)
+        )
+    mrope = batch.get("mrope_positions")
+    new_cache = dict(cache)
+    if cfg.first_dense_layers:
+        outs = []
+        for i in range(cfg.first_dense_layers):
+            sel = lambda a: a[i]
+            x, nc = T.member_decode(
+                jax.tree.map(sel, params["prefix"][0]), x,
+                jax.tree.map(sel, cache["prefix"][0]), cfg, "attn", "mlp",
+                position, mrope,
+            )
+            outs.append(nc)
+        new_cache["prefix"] = (jax.tree.map(lambda *xs: jnp.stack(xs), *outs),)
+    x, nsc = yield from T.stack_decode_staged(
+        params["stack"], x, cache["stack"], cfg, position, mrope
+    )
+    new_cache["stack"] = nsc
+    h = _norm_f(cfg)(params["final_norm"], x)
+    logits = _unembed(params, h, cfg)
+    return logits[:, 0], new_cache

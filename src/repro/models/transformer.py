@@ -99,7 +99,9 @@ def member_train(params, x, cfg, mixer, ffn, positions, mrope_positions, use_ker
     return x, aux
 
 
-def member_decode(params, x, cache, cfg, mixer, ffn, position, mrope_positions):
+def member_decode_mixer(params, x, cache, cfg, mixer, position, mrope_positions):
+    """The mixer half of one decode member: pre-norm mixer + residual.
+    Returns (x, new_cache) — the FFN half (if any) applies on top."""
     norm = _norm(cfg)
     h = norm(params["norm1"], x)
     if mixer == "attn":
@@ -113,9 +115,26 @@ def member_decode(params, x, cache, cfg, mixer, ffn, position, mrope_positions):
         mx, cache = XL.mlstm_decode(params["mixer"], h, cache, cfg)
     else:
         mx, cache = XL.slstm_decode(params["mixer"], h, cache, cfg)
-    x = x + mx
+    return x + mx, cache
+
+
+@functools.lru_cache(maxsize=None)
+def mixer_decode_jit(cfg, mixer):
+    """Jitted ``member_decode_mixer`` per (config, mixer kind) — the staged
+    decode path (``stack_decode_staged``) runs the mixers compiled even
+    though the generator itself is eager Python. mrope-free (token serving);
+    callers with mrope positions fall back to the eager form."""
+
+    def fn(params, x, cache, position):
+        return member_decode_mixer(params, x, cache, cfg, mixer, position, None)
+
+    return jax.jit(fn)
+
+
+def member_decode(params, x, cache, cfg, mixer, ffn, position, mrope_positions):
+    x, cache = member_decode_mixer(params, x, cache, cfg, mixer, position, mrope_positions)
     if ffn != "none":
-        h2 = norm(params["norm2"], x)
+        h2 = _norm(cfg)(params["norm2"], x)
         if ffn == "moe":
             y, _ = MOE.moe_apply_auto(params["ffn"], h2, cfg)
         else:
@@ -226,6 +245,57 @@ def stack_decode(stack_params, x, caches, cfg, position, mrope_positions=None,
         return x, new_caches
 
     x, new_caches = jax.lax.scan(group_fn, x, (stack_params, caches))
+    return x, new_caches
+
+
+def stack_decode_staged(stack_params, x, caches, cfg, position, mrope_positions=None):
+    """Generator twin of ``stack_decode`` that SUSPENDS at every MoE member:
+    instead of computing the expert FFN inline, it yields ``(ffn_params,
+    h2)`` — the member's expert weights and its post-norm2 hidden — and
+    expects the expert output ``y`` sent back (``gen.send(y)``), which it
+    adds to the residual stream exactly where ``member_decode`` would.
+
+    This is the seam multi-tenant serving cuts the forward at: the driver
+    (``serve.fleet.TenantFleet``) collects the yields of N tenants' staged
+    decodes and services them all with ONE combined host program replay per
+    boundary round. Mixers run through the jitted ``mixer_decode_jit``
+    (eager fallback when mrope positions are present); everything outside
+    the MoE members is the same math as ``stack_decode(unroll=True)``.
+
+    Returns (x, new_caches) via StopIteration.value, caches restacked over
+    the group axis like the unroll path.
+    """
+    pattern = cfg.layer_kinds()
+    norm = _norm(cfg)
+    outs = []
+    for g in range(cfg.n_groups):
+        sel = lambda a: a[g]
+        group_params = jax.tree.map(sel, stack_params)
+        group_cache = jax.tree.map(sel, caches)
+        new_caches = []
+        for mi, (mixer, ffn) in enumerate(pattern):
+            if mrope_positions is None:
+                x, nc = mixer_decode_jit(cfg, mixer)(
+                    group_params[mi], x, group_cache[mi], position
+                )
+            else:
+                x, nc = member_decode_mixer(
+                    group_params[mi], x, group_cache[mi], cfg, mixer,
+                    position, mrope_positions,
+                )
+            new_caches.append(nc)
+            if ffn == "moe":
+                h2 = norm(group_params[mi]["norm2"], x)
+                y = yield (group_params[mi]["ffn"], h2)
+                x = x + jnp.asarray(y, x.dtype)
+            elif ffn != "none":
+                h2 = norm(group_params[mi]["norm2"], x)
+                x = x + L.mlp_apply(
+                    group_params[mi]["ffn"], h2,
+                    act=jax.nn.silu if cfg.mlp_gated else jax.nn.gelu,
+                )
+        outs.append(tuple(new_caches))
+    new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
     return x, new_caches
 
 

@@ -21,6 +21,13 @@ hardcoded one strategy. The ``Autotuner`` closes that gap:
         only — the fused wave pipeline that overlaps dispatch with the
         per-destination compute; priced with the max-of-overlap discount
         when the key carries a ``compute_us`` term)
+      - ``site="combined"`` (N disjoint guests on one host — the
+        multi-tenant fleet's boundary replays): combined | time_mux.
+        ``combined`` is ONE merged-program replay at makespan
+        max(T_1..T_N); ``time_mux`` is N sequential solo replays at
+        ΣT_i. Keyed on the guest-set signature (``decide_combined``),
+        since the tenant mix — not just the host shape — decides the
+        merge's worth.
 
     where ``loop`` is the per-stage D3 schedule replay, ``overlap`` the
     same program in ``start_step`` order, ``fused`` the ``optimize()``
@@ -72,9 +79,9 @@ SCHEMA_VERSION = 1
 DEFAULT_CACHE = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "autotune_cache.json"
 
 KINDS = ("alltoall", "allreduce", "broadcast", "matmul")
-SITES = ("host", "global", "shard")
+SITES = ("host", "global", "shard", "combined")
 STRATEGIES = ("loop", "overlap", "fused", "pallas_fused", "xla",
-              "overlap_fused")
+              "overlap_fused", "combined", "time_mux")
 
 #: analytic seed constants (calibration overrides these — they only need to
 #: produce a sane ranking before the first measurement lands in the cache)
@@ -123,13 +130,15 @@ class TuneKey:
     M: int
     nbytes: int    # bucketed message bytes (per chunk / vector / block)
     dtype: str
-    site: str      # host | global | shard
+    site: str      # host | global | shard | combined
     compute_us: int = 0  # bucketed fused-compute µs per device (0 = none)
     emulated: bool = False  # guest-on-host program (xla excluded)
+    guests: str = ""  # combined sites: the guest-set signature ("2xD3(1,2)")
 
     def __str__(self) -> str:
         tail = f"|c{self.compute_us}" if self.compute_us else ""
         tail += "|emu" if self.emulated else ""
+        tail += f"|g{self.guests}" if self.guests else ""
         return (f"{self.kind}|K{self.K}M{self.M}|b{self.nbytes}"
                 f"|{self.dtype}|{self.site}{tail}")
 
@@ -163,6 +172,8 @@ class Decision:
 
 def _default_strategy(kind: str, site: str) -> str:
     """What each call site did BEFORE the autotuner existed (mode='off')."""
+    if site == "combined":
+        return "time_mux"  # pre-fleet behavior: every tenant served alone
     return "xla" if site == "shard" else "loop"
 
 
@@ -173,6 +184,8 @@ def candidates(kind: str, site: str, *, emulated: bool = False) -> tuple[str, ..
     the fused op would mix idle devices into the result."""
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}")
+    if site == "combined":
+        return ("combined", "time_mux")
     if site == "host":
         out: tuple[str, ...] = ("loop", "fused")
     elif site == "global":
@@ -231,6 +244,12 @@ def layout_for(n: int):
     from repro.dist.mesh import dragonfly_layout
 
     return dragonfly_layout(n)
+
+
+def _guest_layout(embedding):
+    from repro.dist.mesh import DeviceLayout
+
+    return DeviceLayout(embedding.guest)
 
 
 # ---------------------------------------------------------------------------
@@ -305,6 +324,43 @@ def priced_rounds(kind: str, layout, grid=None) -> tuple[int, float]:
     paper-table numbers the reports attach to each decision."""
     sched = _schedule(kind, layout, grid)
     return len(sched.rounds), costmodel.price(sched, t_w=1.0, t_s=0.0)
+
+
+def guest_signature(embeddings) -> str:
+    """Canonical guest-set signature for combined-site keys: shape counts
+    in sorted order, e.g. ``"2xD3(1,2)"`` or ``"1xD3(1,2)+1xD3(2,2)"`` —
+    placement-independent, so re-admitting the same mix after churn hits
+    the same cache entry."""
+    counts: dict[str, int] = {}
+    for e in embeddings:
+        s = f"D3({e.guest.K},{e.guest.M})"
+        counts[s] = counts.get(s, 0) + 1
+    return "+".join(f"{n}x{s}" for s, n in sorted(counts.items()))
+
+
+def analytic_combined_prices(kind: str, embeddings, nbytes: int
+                             ) -> dict[str, float]:
+    """Seed prices (µs) for one combined site: ``combined`` pays the
+    makespan — max of the guests' priced hops — plus the MERGED program's
+    per-stage overhead (same-stamp stages packed into one partial stage);
+    ``time_mux`` pays the sum of hops plus every solo program's stage
+    overhead. The wire term dominates at scale, the software term at toy
+    sizes — both favor combining, by Property 2's disjoint-links argument."""
+    from repro.dist import collectives as coll
+    from repro.dist.mesh import DeviceLayout
+    from repro.runtime import lowering
+
+    hops, stages = [], []
+    for emb in embeddings:
+        sched = _schedule(kind, DeviceLayout(emb.guest))
+        hops.append(costmodel.price(sched, t_w=1.0, t_s=0.0))
+        stages.append(len(lowering.lower(sched).stages))
+    comb = coll.concurrent_program(kind, tuple(embeddings))
+    combined = costmodel.seconds(max(hops), T_W, len(comb.stages) * T_DISPATCH,
+                                 bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
+    mux = costmodel.seconds(sum(hops), T_W, sum(stages) * T_DISPATCH,
+                            bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
+    return {"combined": combined * 1e6, "time_mux": mux * 1e6}
 
 
 # ---------------------------------------------------------------------------
@@ -476,6 +532,52 @@ def _measure_closure(kind: str, site: str, strategy: str, layout, grid,
     return lambda: jax.block_until_ready(run(xj, p))
 
 
+def _measure_combined_closure(kind: str, strategy: str, embeddings,
+                              nbytes: int, dtype: str):
+    """A zero-arg runnable of one combined-site strategy, or None when the
+    kind has no device-free replay to time. Both arms replay on the NumPy
+    reference backend (host-site style: deterministic, no device quorum):
+    ``combined`` is ONE merged-program replay, ``time_mux`` is every
+    guest's solo emulated replay back to back — the exact pair of
+    executions the multi-tenant fleet chooses between."""
+    if kind not in ("alltoall", "allreduce"):
+        return None
+    from repro.dist import collectives as coll
+    from repro.dist.mesh import DeviceLayout
+    from repro.runtime.backends.reference import NumpyReferenceBackend
+    from repro.runtime.combine import scatter_guests
+
+    ref = NumpyReferenceBackend()
+    e = _elems(nbytes, dtype)
+    rng = np.random.default_rng(0)
+    axes = (0, 1) if kind == "alltoall" else (0,)
+    solos, xs = [], []
+    for emb in embeddings:
+        layout = DeviceLayout(emb.guest)
+        if kind == "alltoall":
+            solos.append(coll.alltoall_program(layout, emb))
+            xs.append(rng.standard_normal(
+                (layout.topo.num_routers, layout.topo.num_routers, e)
+            ).astype(dtype))
+        else:
+            solos.append(coll.allreduce_program(layout, emb))
+            xs.append(rng.standard_normal(
+                (layout.topo.num_routers, e)).astype(dtype))
+    run = ref.run_alltoall if kind == "alltoall" else ref.run_allreduce
+    if strategy == "combined":
+        comb = coll.concurrent_program(kind, tuple(embeddings))
+        xh = scatter_guests(xs, embeddings, axes=axes)
+        return lambda: run(xh, comb)
+    hs = [scatter_guests([x], [emb], axes=axes)
+          for x, emb in zip(xs, embeddings)]
+
+    def mux():
+        for prog, xh in zip(solos, hs):
+            run(xh, prog)
+
+    return mux
+
+
 # ---------------------------------------------------------------------------
 # The tuner
 # ---------------------------------------------------------------------------
@@ -623,6 +725,11 @@ class Autotuner:
                     fn = None
                 if fn is not None:
                     measured[s] = _time_us(fn)
+        return self._conclude(key, rounds, hops, analytic, measured)
+
+    def _conclude(self, key, rounds, hops, analytic, measured):
+        """Rank + record: cheapest measured strategy (persisted to the disk
+        cache) or, with nothing measurable, cheapest analytic seed."""
         if measured:
             strategy = min(measured, key=measured.__getitem__)
             dec = Decision(key, strategy, "measured", rounds, hops, analytic, measured)
@@ -636,6 +743,65 @@ class Autotuner:
         else:
             strategy = min(analytic, key=analytic.__getitem__)
             dec = Decision(key, strategy, "analytic", rounds, hops, analytic, {})
+        return dec
+
+    # -------------------------------------------------- combined guest sites
+    def decide_combined(self, kind: str, embeddings, nbytes: int = 0,
+                        dtype: str = "float32") -> Decision:
+        """Combined-vs-time-muxed for one tenant SET: should N disjoint
+        guests' ``kind`` collectives replay as one merged host program
+        (makespan max(T_i)) or one by one (ΣT_i)?
+
+        The key is the ``combined`` site class keyed on the guest-set
+        signature — same host, same bytes, but a different tenant mix is a
+        different decision. Measurement replays both arms on the reference
+        backend (device-free, like ``site="host"``); kinds without a
+        reference replay rank analytically. Memoized and disk-cached like
+        ``decide``."""
+        embeddings = tuple(embeddings)
+        if not embeddings:
+            raise ValueError("decide_combined needs at least one embedding")
+        host = embeddings[0].host
+        key = TuneKey(kind, host.K, host.M, bucket_bytes(nbytes),
+                      str(np.dtype(dtype)), "combined", 0, True,
+                      guest_signature(embeddings))
+        if key in self._memo:
+            return self._memo[key]
+
+        cands = candidates(kind, "combined")
+        analytic = analytic_combined_prices(kind, embeddings, key.nbytes)
+        from repro.dist import collectives as coll
+
+        comb = coll.concurrent_program(kind, embeddings)
+        rounds = comb.num_rounds
+        hops = max(
+            costmodel.price(_schedule(kind, _guest_layout(e)), t_w=1.0, t_s=0.0)
+            for e in embeddings
+        )
+
+        if self.force is not None:
+            strategy = self.force if self.force in cands else cands[0]
+            dec = Decision(key, strategy, "forced", rounds, hops, analytic, {})
+        elif self.mode == "off":
+            dec = Decision(key, _default_strategy(kind, "combined"), "off",
+                           rounds, hops, analytic, {})
+        else:
+            dec = (self._cached_decision(key, cands, rounds, hops, analytic)
+                   if self.mode == "measure" else None)
+            if dec is None:
+                measured: dict[str, float] = {}
+                if self.mode == "measure":
+                    for s in cands:
+                        try:
+                            fn = _measure_combined_closure(
+                                kind, s, embeddings, key.nbytes, key.dtype)
+                        except Exception:
+                            fn = None
+                        if fn is not None:
+                            measured[s] = _time_us(fn)
+                dec = self._conclude(key, rounds, hops, analytic, measured)
+        self._memo[key] = dec
+        self.decisions.append(dec)
         return dec
 
     # ------------------------------------------------------------ report

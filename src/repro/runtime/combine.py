@@ -431,3 +431,51 @@ def scatter_guests(xs, guests, host_shape=None, *, axes=(0,), fill=0) -> np.ndar
             index[ax] = idx.reshape(shape)
         out[tuple(index)] = x
     return out
+
+
+def run_matmul_guests(backend, Bs, As, program: CollectiveProgram, guests
+                      ) -> list[np.ndarray]:
+    """N whole-matrix §2 products through ONE combined replay.
+
+    The whole-matrix twin of a combined ``matmul_blocks`` call: each
+    guest's (N·X, N·X) factor matrices are cut into §2 blocks
+    (``core.matmul.scatter_blocks``, grid = the shared guest grid), every
+    guest's blocks land at its own host slots (``scatter_guests``), the
+    backend replays the combined program ONCE at the blocks level, and each
+    product matrix is reassembled from its guest's slots. Returns
+    ``[B_g @ A_g for g in guests]`` in guest order.
+
+    ``program`` must come from ``combine`` (or
+    ``dist.collectives.concurrent_program('matmul', ...)``) over guests of
+    ONE grid shape — that is the only combinable matmul case, and it is
+    what makes ``program.grid`` the per-guest grid. ``backend`` needs the
+    blocks-level entry point (``matmul_blocks``); the per-shard
+    ``run_matmul`` wrappers can't express N disjoint whole matrices.
+    """
+    from repro.core.matmul import MatmulGrid, gather_blocks, scatter_blocks
+
+    if len(Bs) != len(As) or len(Bs) != len(guests):
+        raise ValueError(
+            f"{len(Bs)} B / {len(As)} A matrices for {len(guests)} guests"
+        )
+    if program.kind != "matmul":
+        raise ValueError(f"expected a matmul program, got {program.kind!r}")
+    if program.grid is None:
+        raise ValueError(
+            "combined program lacks grid metadata — matmul guests of mixed "
+            "grid shapes cannot share one whole-matrix replay"
+        )
+    if not hasattr(backend, "matmul_blocks"):
+        raise ValueError(
+            f"backend {getattr(backend, 'name', type(backend).__name__)!r} "
+            "has no blocks-level matmul entry point (matmul_blocks); the "
+            "combined whole-matrix wrapper needs it"
+        )
+    g = MatmulGrid(*program.grid)
+    bs = [scatter_blocks(g, np.asarray(B)) for B in Bs]
+    as_ = [scatter_blocks(g, np.asarray(A)) for A in As]
+    host_shape = (program.n, *bs[0].shape[1:])
+    bh = scatter_guests(bs, guests, host_shape)
+    ah = scatter_guests(as_, guests, host_shape)
+    ch = backend.matmul_blocks(bh, ah, program)
+    return [gather_blocks(g, cg) for cg in gather_guests(ch, guests)]

@@ -1,5 +1,8 @@
-"""Serving substrate: batched decode engine with continuous batching."""
+"""Serving substrate: batched decode engine with continuous batching, and
+the multi-tenant fleet that serves N models through one combined host
+program."""
 
 from repro.serve.engine import Engine, Request
+from repro.serve.fleet import FleetEngine, Tenant, TenantFleet
 
-__all__ = ["Engine", "Request"]
+__all__ = ["Engine", "Request", "FleetEngine", "Tenant", "TenantFleet"]

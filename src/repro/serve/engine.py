@@ -41,6 +41,7 @@ class Engine:
             lambda p, c, b, pos: M.decode_step(p, c, b, pos, self.cfg)
         )
         self.steps_run = 0
+        self.tokens_out = 0  # decoded (committed) tokens, for tokens/s
 
     @property
     def free_slots(self):
@@ -48,6 +49,20 @@ class Engine:
 
     # ------------------------------------------------------------- admit
     def admit(self, req: Request) -> bool:
+        """Seat ``req`` in a free slot and prefill its prompt.
+
+        CO-ADVANCE SEMANTICS (intended, tested): prefill feeds the prompt
+        through the same batched decode path, one engine step per prompt
+        token, and every OTHER active slot DECODES during those steps —
+        continuous batching has no prefill stall, so the tokens the other
+        slots emit while a prompt streams in are real output, identical to
+        what they would have produced solo, and they count against those
+        requests' ``max_new_tokens`` budgets exactly like any decoded
+        token (a request can even finish mid-prefill; its slot frees for
+        the next ``admit``). Prefill steps are NOT charged to the admitted
+        request's budget — its ``out`` stays empty until the first decode
+        step after admission.
+        """
         free = self.free_slots
         if not free:
             return False
@@ -63,18 +78,30 @@ class Engine:
         return True
 
     # -------------------------------------------------------------- step
-    def _advance(self, decode_slots):
+    def _forward(self) -> np.ndarray:
+        """One batched model forward over all slots (the seam subclasses
+        override — ``serve.fleet.FleetEngine`` runs the staged decode here
+        so MoE boundaries can be serviced by a combined host program).
+        Returns host logits (slots, vocab) and updates ``self.cache``."""
         batch = {"token": jnp.asarray(self.pending_tok)}
         logits, self.cache = self._step(
             self.params, self.cache, batch, jnp.asarray(self.positions)
         )
-        logits = np.asarray(logits, np.float32)
+        return np.asarray(logits, np.float32)
+
+    def _advance(self, decode_slots):
+        return self._commit(self._forward(), decode_slots)
+
+    def _commit(self, logits, decode_slots):
+        """Book one forward's results: bump positions, argmax-append for the
+        decoding slots, retire finished requests and free their slots."""
         self.steps_run += 1
         self.positions[list(self.slot_req)] += 1
         for slot in decode_slots:
             req = self.slot_req[slot]
             nxt = int(np.argmax(logits[slot]))
             req.out.append(nxt)
+            self.tokens_out += 1
             self.pending_tok[slot] = nxt
             if len(req.out) >= req.max_new_tokens or self.positions[slot] >= self.max_seq - 1:
                 req.done = True

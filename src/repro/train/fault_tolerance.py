@@ -263,8 +263,6 @@ class MultiTenantCluster(_HostState):
         the freed healthy routers. The returned plan reports survivor and
         evictee ids as positions at call time.
         """
-        from repro.runtime.combine import GuestConflictError, combine
-
         dead_ids = {self.layout.topo.router_id(r) for r in self.dead}
         surviving, evicted = [], []
         for tid, emb in enumerate(self.tenants):
@@ -272,27 +270,51 @@ class MultiTenantCluster(_HostState):
             (evicted if hit else surviving).append(tid)
         if not surviving:
             raise RuntimeError("no tenant survives the failure set")
+        return self._recombine(surviving, evicted, kinds)
+
+    def release(self, tenant_index: int, kinds=None) -> TenantPlan:
+        """Voluntary churn: unseat tenant ``tenant_index`` (a position in
+        admission order at call time, no failure involved) and re-combine
+        the remaining tenants — the same cached-rewrite path as
+        ``plan_eviction``, so releasing back to a previously-seen tenant
+        set costs a cache lookup. Unlike failure-driven eviction, releasing
+        the LAST tenant is legal: the plan simply carries no survivors and
+        an empty program dict."""
+        if not 0 <= tenant_index < len(self.tenants):
+            raise IndexError(
+                f"tenant index {tenant_index} out of range "
+                f"({len(self.tenants)} seated)"
+            )
+        surviving = [t for t in range(len(self.tenants)) if t != tenant_index]
+        return self._recombine(surviving, [tenant_index], kinds)
+
+    def _recombine(self, surviving, evicted, kinds) -> TenantPlan:
+        """Unseat ``evicted`` and combine the survivors' programs — the
+        shared rewrite-only tail of ``plan_eviction`` and ``release``
+        (cached ``emulate`` + cached ``combine``, zero derivations)."""
+        from repro.runtime.combine import GuestConflictError, combine
+
         embs = tuple(self.tenants[t] for t in surviving)
         self.tenants = list(embs)  # unseat the evicted tenants
-        suites = [
-            self.library[(e.guest.K, e.guest.M)] for e in embs
-        ]
-        supported = set(suites[0].programs)
-        for s in suites[1:]:
-            supported &= set(s.programs)
-        # explicit kinds intersect with what every survivor supports, the
-        # same skip-unsupported semantics as lower_layout_programs
-        kinds = supported if kinds is None else set(kinds) & supported
         programs: dict[str, CollectiveProgram] = {}
-        for kind in sorted(kinds):
-            try:
-                programs[kind] = combine(
-                    [emulate(s.programs[kind], e) for s, e in zip(suites, embs)]
-                )
-            except GuestConflictError:
-                if kind == "matmul":  # shape-mixed tenants can't share the
-                    continue          # local-contract skeleton — skip kind
-                raise
+        if embs:
+            suites = [self.library[(e.guest.K, e.guest.M)] for e in embs]
+            supported = set(suites[0].programs)
+            for s in suites[1:]:
+                supported &= set(s.programs)
+            # explicit kinds intersect with what every survivor supports,
+            # the same skip-unsupported semantics as lower_layout_programs
+            kinds = supported if kinds is None else set(kinds) & supported
+            for kind in sorted(kinds):
+                try:
+                    programs[kind] = combine(
+                        [emulate(s.programs[kind], e)
+                         for s, e in zip(suites, embs)]
+                    )
+                except GuestConflictError:
+                    if kind == "matmul":  # shape-mixed tenants can't share
+                        continue          # the local-contract skeleton
+                    raise
         return TenantPlan(
             surviving=tuple(surviving),
             evicted=tuple(evicted),

@@ -299,6 +299,52 @@ def test_moe_site_report_shapes(tmp_path):
     assert rep["rounds"] >= 1 and rep["priced_hops"] > 0
 
 
+# ------------------------------------------------------ combined guest site
+def _fleet_embeddings():
+    from repro.core.emulation import disjoint_embeddings
+    from repro.core.topology import D3
+
+    return tuple(disjoint_embeddings(D3(4, 2), [(1, 2), (1, 2)]))
+
+
+def test_decide_combined_key_and_measured_win(tmp_path):
+    """The combined site class: keyed on the guest-set signature, measured
+    via reference replays of BOTH arms, and on disjoint same-shape guests
+    the merged program wins (max vs sum of rounds)."""
+    embs = _fleet_embeddings()
+    tuner = at.Autotuner(cache_path=tmp_path / "c.json")
+    dec = tuner.decide_combined("alltoall", embs, nbytes=4096)
+    assert str(dec.key).endswith("|combined|emu|g2xD3(1,2)")
+    assert dec.source == "measured"
+    assert set(dec.measured_us) == {"combined", "time_mux"}
+    assert dec.strategy == "combined"
+    assert dec.analytic_us["combined"] < dec.analytic_us["time_mux"]
+    # memoized, and placement-independent: the reversed tenant order is the
+    # same signature, hence the same decision object
+    assert tuner.decide_combined("alltoall", embs[::-1], nbytes=4096) is dec
+    # a second tuner on the same cache path replays from disk
+    warm = at.Autotuner(cache_path=tmp_path / "c.json")
+    dec2 = warm.decide_combined("alltoall", embs, nbytes=4096)
+    assert dec2.source == "cache" and dec2.strategy == dec.strategy
+
+
+def test_decide_combined_modes_and_candidates(tmp_path):
+    embs = _fleet_embeddings()
+    assert at.candidates("alltoall", "combined") == ("combined", "time_mux")
+    ana = at.Autotuner(cache_path=tmp_path / "a.json", mode="analytic")
+    d = ana.decide_combined("alltoall", embs, nbytes=1 << 20)
+    assert d.source == "analytic" and d.strategy == "combined"
+    off = at.Autotuner(cache_path=tmp_path / "b.json", mode="off")
+    assert off.decide_combined("alltoall", embs).strategy == "time_mux"
+    forced = at.Autotuner(cache_path=tmp_path / "d.json", force="time_mux")
+    assert forced.decide_combined("alltoall", embs).source == "forced"
+    with pytest.raises(ValueError, match="at least one"):
+        ana.decide_combined("alltoall", ())
+    # plain keys are unchanged by the guests field (old caches stay valid)
+    assert "|g" not in str(at.TuneKey("alltoall", 4, 2, 4096, "float32",
+                                      "shard"))
+
+
 # ------------------------------------------- subprocess end-to-end checks
 @pytest.mark.slow
 def test_moe_auto_bit_exact_8dev():

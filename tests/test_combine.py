@@ -198,6 +198,37 @@ def test_combined_matmul_blocks_bit_exact_and_skeleton_guard():
                  emulate(other, embed(HOST, 4, 2, p_set=(2, 3)))])
 
 
+def test_run_matmul_guests_whole_matrix_wrapper():
+    """``run_matmul_guests``: N whole (N·X, N·X) products through one
+    combined blocks-level replay — each guest's result equals its plain
+    ``B @ A``, and the guardrails (count mismatch, wrong kind, backend
+    without ``matmul_blocks``) raise informatively."""
+    from repro.runtime.combine import run_matmul_guests
+
+    g = mm.MatmulGrid(1, 2)
+    embs = disjoint_embeddings(HOST, [(1, 2), (1, 2)])
+    comb = combine([emulate(lowering.lower(mm.schedule(g)), e) for e in embs])
+    rng = np.random.default_rng(3)
+    side = g.n * 3
+    Bs = [rng.integers(-4, 5, (side, side)).astype(np.float64) for _ in embs]
+    As = [rng.integers(-4, 5, (side, side)).astype(np.float64) for _ in embs]
+    Cs = run_matmul_guests(REF, Bs, As, comb, embs)
+    for B, A, C in zip(Bs, As, Cs):
+        np.testing.assert_array_equal(C, B @ A)
+
+    with pytest.raises(ValueError, match="guests"):
+        run_matmul_guests(REF, Bs[:1], As, comb, embs)
+    comb_a2a = combine(_combined_alltoall()[1])
+    with pytest.raises(ValueError, match="matmul"):
+        run_matmul_guests(REF, Bs, As, comb_a2a, embs)
+
+    class NoBlocks:
+        name = "noblocks"
+
+    with pytest.raises(ValueError, match="matmul_blocks"):
+        run_matmul_guests(NoBlocks(), Bs, As, comb, embs)
+
+
 # ------------------------------------------------------------ validation
 def test_overlapping_images_raise_structured_error():
     prog, solos = _combined_alltoall()

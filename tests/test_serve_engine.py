@@ -96,3 +96,64 @@ def test_slot_reuse(setup):
     eng.run_to_completion()
     assert r2.done
     assert r2.out == r1.out  # same prompt, same params -> same greedy output
+
+
+def test_admit_coadvance_semantics(setup):
+    """The documented co-advance contract of ``Engine.admit``: while a new
+    prompt prefills, every other active slot keeps DECODING — those tokens
+    are real output, identical to solo greedy, they count against the
+    decoding request's budget (it can finish mid-prefill), and the
+    admitted request itself is charged nothing until its first decode."""
+    cfg, params = setup
+    a_prompt = np.asarray([3, 7], np.int32)
+    solo = greedy_reference(cfg, params, a_prompt, 3)
+    eng = Engine(cfg, params, batch_slots=2, max_seq=64)
+    a = Request(rid=0, prompt=a_prompt, max_new_tokens=3)
+    eng.admit(a)
+    eng.step()
+    assert len(a.out) == 1
+    # 6-token prompt = 5 co-advance steps: a's remaining budget (2) is
+    # consumed mid-prefill and its slot frees before admit returns
+    b = Request(rid=1, prompt=np.asarray([9, 8, 7, 6, 5, 4], np.int32),
+                max_new_tokens=2)
+    eng.admit(b)
+    assert a.done and a.out == solo      # finished DURING b's prefill
+    assert b.out == []                   # prefill charged nothing to b
+    eng.run_to_completion()
+    assert b.done and len(b.out) == 2
+    assert b.out == greedy_reference(cfg, params, b.prompt, 2)
+
+
+def test_admit_into_slot_freed_same_step(setup):
+    """A slot retired inside ``step`` is admittable immediately — no dead
+    step between retirement and the next request — and the re-admitted
+    request's output matches solo greedy despite the stale cache beyond
+    its positions."""
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_slots=1, max_seq=64)
+    r1 = Request(rid=0, prompt=np.asarray([4, 13], np.int32), max_new_tokens=1)
+    eng.admit(r1)
+    eng.step()  # r1 finishes and leaves its slot during THIS step
+    assert r1.done and eng.free_slots == [0]
+    r2 = Request(rid=1, prompt=np.asarray([7, 7, 7], np.int32), max_new_tokens=3)
+    assert eng.admit(r2)
+    eng.run_to_completion()
+    assert r2.done
+    assert r2.out == greedy_reference(cfg, params, r2.prompt, 3)
+
+
+def test_max_seq_truncation(setup):
+    """A request whose budget exceeds the cache truncates at max_seq-1
+    instead of writing past the cache (and still reports done)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_slots=1, max_seq=12)
+    req = Request(rid=0, prompt=np.asarray([5, 9, 42], np.int32),
+                  max_new_tokens=100)
+    eng.admit(req)
+    eng.run_to_completion()
+    assert req.done
+    assert 0 < len(req.out) < 100
+    # truncated exactly at the cache bound, bit-exact up to the cut
+    want = greedy_reference(cfg, params, req.prompt, len(req.out))
+    assert req.out == want
+    assert eng.tokens_out == len(req.out)
