@@ -169,9 +169,68 @@ def disjoint_embeddings(host: D3, guest_shapes) -> tuple[Embedding, ...]:
     )
 
 
+#: above this many poisoned position indices the mixed search switches
+#: from exact subset enumeration (2^|bad_p| candidates) to a greedy
+#: peel — far beyond any failure pattern the drills inject.
+_MIXED_EXACT_LIMIT = 16
+
+
+def _mixed_candidates(host: D3, dead: set[Router], bad_p: set[int]):
+    """The mixed cabinet×position regime: for every kept-position set P,
+    the best cabinet set is forced — C must exclude exactly the cabinets
+    that still hold a dead router with BOTH indices inside P (a dead
+    (c, d, p) is excluded from C × P × P as soon as d or p leaves P).
+    Only positions that appear in ``dead`` are worth dropping, so the
+    search enumerates subsets of ``bad_p`` (smallest drops first, so
+    equal-sized survivors resolve deterministically toward keeping more
+    positions); past ``_MIXED_EXACT_LIMIT`` poisoned indices it degrades
+    to a greedy peel of the most-poisoning position."""
+    import itertools
+
+    ordered = sorted(bad_p)
+
+    def candidate(drop: tuple[int, ...]):
+        p_set = tuple(p for p in range(host.M) if p not in drop)
+        if not p_set:
+            return None
+        kept = set(p_set)
+        poisoned = {c for c, d, p in dead if d in kept and p in kept}
+        c_set = tuple(c for c in range(host.K) if c not in poisoned)
+        if not c_set:
+            return None
+        return len(c_set) * len(p_set) * len(p_set), c_set, p_set
+
+    if len(ordered) <= _MIXED_EXACT_LIMIT:
+        for k in range(1, len(ordered)):  # proper mixed drops only: the
+            # empty drop is the pure cabinet regime, the full drop the
+            # pure position regime — both already priced by the caller
+            for drop in itertools.combinations(ordered, k):
+                cand = candidate(drop)
+                if cand is not None:
+                    yield cand
+        return
+    # greedy peel: repeatedly drop the position poisoning the most cabinets
+    drop: list[int] = []
+    remaining = set(ordered)
+    while remaining:
+        kept = {p for p in range(host.M) if p not in drop}
+
+        def poisoners(q):
+            k = kept - {q}
+            return len({c for c, d, p in dead if d in k and p in k})
+
+        worst = min(remaining, key=lambda q: (poisoners(q), q))
+        drop.append(worst)
+        remaining.discard(worst)
+        if len(drop) < len(ordered):  # proper mixed drops only (see above)
+            cand = candidate(tuple(drop))
+            if cand is not None:
+                yield cand
+
+
 def largest_embeddable(host: D3, dead: set[Router]) -> tuple[int, int, tuple, tuple]:
-    """Survivor-set search over the two drop regimes of Property 2; returns
-    (J, L, c_set, p_set) with n = J·L² maximal between them.
+    """Survivor-set search over the drop regimes of Property 2; returns
+    (J, L, c_set, p_set) with n = J·L² maximal among them.
 
     A dead router (c, d, p) is excluded from the C × P × P image iff its
     cabinet leaves C or one of its (d, p) indices leaves P, so two pure
@@ -184,9 +243,14 @@ def largest_embeddable(host: D3, dead: set[Router]) -> tuple[int, int, tuple, tu
         (both its d and its p) — survivors D3(K, M − |bad_p|), best for
         failures striped across many cabinets at few (d, p) indices.
 
-    We price both and keep the larger network (ties to cabinet-drop, which
-    keeps drawers whole). Mixed drops (some cabinets AND some positions)
-    are a set-cover problem left to callers with exotic failure patterns.
+    Failures striped across SOME cabinets at SOME positions are a
+    set-cover problem the *mixed* regime solves: drop a subset of the
+    poisoned positions AND the cabinets the surviving position set still
+    can't clear (``_mixed_candidates`` — exact for realistic failure
+    counts, greedy beyond ``_MIXED_EXACT_LIMIT`` poisoned indices). All
+    candidates are priced together; ties go cabinet-drop > position-drop
+    > mixed, so the mixed survivor is returned exactly when it strictly
+    dominates both pure regimes (keeping drawers whole otherwise).
     """
     bad_c = {r[0] for r in dead}
     bad_p = {r[1] for r in dead} | {r[2] for r in dead}
@@ -199,6 +263,13 @@ def largest_embeddable(host: D3, dead: set[Router]) -> tuple[int, int, tuple, tu
     if pos_p:
         candidates.append((host.K * len(pos_p) * len(pos_p), 1,
                            tuple(range(host.K)), pos_p))
+    if bad_c and bad_p:  # a mixed drop can only win when both axes hurt
+        best_mixed = None
+        for size, c_set, p_set in _mixed_candidates(host, dead, bad_p):
+            if best_mixed is None or size > best_mixed[0]:
+                best_mixed = (size, 2, c_set, p_set)
+        if best_mixed is not None:
+            candidates.append(best_mixed)
     if not candidates:
         raise RuntimeError("no embeddable subnetwork survives")
     _, _, c_set, p_set = max(candidates, key=lambda t: (t[0], -t[1]))

@@ -85,11 +85,20 @@ def _retain(ckpt_dir: pathlib.Path, keep: int):
 
 
 def latest_step(ckpt_dir) -> int | None:
+    """Newest checkpoint step, or None. Only step_<int> DIRECTORIES count
+    (the same filter ``_retain`` applies): stray files or unparseable
+    names next to the checkpoints — a ``step_tmp`` leftover, an editor
+    backup — are skipped instead of crashing the restore path."""
     ckpt_dir = pathlib.Path(ckpt_dir)
-    ckpts = sorted(ckpt_dir.glob("step_*"))
-    if not ckpts:
-        return None
-    return int(ckpts[-1].name.split("_")[1])
+    steps = []
+    for d in ckpt_dir.glob("step_*"):
+        if not d.is_dir():
+            continue
+        try:
+            steps.append(int(d.name.split("_", 1)[1]))
+        except ValueError:
+            continue
+    return max(steps) if steps else None
 
 
 def restore(ckpt_dir, step: int | None = None, verify: bool = True):

@@ -24,7 +24,11 @@ class DataState:
 
     @classmethod
     def from_dict(cls, d):
-        return cls(**d)
+        """Typed restore: checkpoint round-trips hand back numpy scalars
+        (np.savez boxes every int), so coerce each field through its
+        declared type — the iterator must resume with real Python ints."""
+        fields = {f.name: f.type for f in dataclasses.fields(cls)}
+        return cls(**{k: int(v) for k, v in d.items() if k in fields})
 
 
 class SyntheticLM:

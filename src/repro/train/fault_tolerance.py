@@ -75,6 +75,18 @@ class RecoveryPlan:
     schedules: dict[str, Schedule]
 
 
+#: monotone count of derive+lower suite builds — the hook behind the
+#: rewrite-only assertion: ``train.elastic`` snapshots it around every
+#: failover and asserts the delta is zero (recovery must be pure lookup
+#: + relabel, never a call back into the core schedule derivations).
+_derivations = 0
+
+
+def derivation_count() -> int:
+    """How many times ``lower_layout_programs`` has run in this process."""
+    return _derivations
+
+
 def lower_layout_programs(layout: DeviceLayout, *, root: int = 0) -> LoweredSuite:
     """Derive + lower the paper's algorithm suite for one layout.
 
@@ -85,6 +97,8 @@ def lower_layout_programs(layout: DeviceLayout, *, root: int = 0) -> LoweredSuit
     a perfect square, and degenerate shapes (single drawer/cabinet) skip
     whichever derivations reject them.
     """
+    global _derivations
+    _derivations += 1
     from repro.core import alltoall as a2a
     from repro.core import broadcast as bc
     from repro.core import hypercube as hc
@@ -149,13 +163,19 @@ class _HostState:
 @dataclasses.dataclass
 class ClusterState(_HostState):
     def fallback_shapes(self) -> list[tuple[int, int]]:
-        """Every shape ``largest_embeddable`` can return on this pod: the
-        cabinet-drop ladder (j, M) and the position-drop ladder (K, l),
-        including the healthy (K, M) itself."""
+        """Every shape ``largest_embeddable`` can return on this pod —
+        the full mixed ladder. The pure regimes reach only the cabinet-
+        drop column (j, M) and the position-drop row (K, l); the mixed
+        cabinet×position search can land on ANY (j, l) with 1 ≤ j ≤ K,
+        1 ≤ l ≤ M (e.g. striped failures dropping one cabinet and one
+        position), so the library pre-lowers the whole grid, largest
+        survivors first (ties toward whole drawers, mirroring the
+        search's own tie-break), the healthy (K, M) included."""
         K, M = self.layout.topo.K, self.layout.topo.M
-        shapes = [(j, M) for j in range(K, 0, -1)]
-        shapes += [(K, l) for l in range(M - 1, 0, -1)]
-        return shapes
+        return sorted(
+            ((j, l) for j in range(1, K + 1) for l in range(1, M + 1)),
+            key=lambda jl: (-(jl[0] * jl[1] * jl[1]), -jl[1], -jl[0]),
+        )
 
     def prepare_fallbacks(self, shapes=None, *, root: int = 0) -> None:
         """Populate the program library ahead of failures — the derive/lower

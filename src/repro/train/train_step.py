@@ -84,6 +84,64 @@ def make_train_step(cfg, opt_cfg: O.OptConfig, settings: TrainSettings):
     return train_step
 
 
+def split_microbatches(batch, mb_n: int):
+    """Host-side microbatch split — same layout as the in-step scan split
+    (mrope_positions carries batch on axis 1), but returning a list of
+    per-microbatch dicts so the launcher can time and drop individual
+    microbatches (the straggler path)."""
+
+    def split(name, x):
+        if name == "mrope_positions":  # (3, B, S): batch on axis 1
+            return x.reshape(3, mb_n, -1, *x.shape[2:]).swapaxes(0, 1)
+        return x.reshape(mb_n, -1, *x.shape[1:])
+
+    mbs = {k: split(k, v) for k, v in batch.items()}
+    return [{k: v[i] for k, v in mbs.items()} for i in range(mb_n)]
+
+
+def make_microbatch_grads(cfg, settings: TrainSettings):
+    """-> mb_grads(params, microbatch) -> (loss, metrics, grads_f32).
+
+    One microbatch's contribution in isolation, so the launcher can time
+    each accumulation step on the host and drop stragglers before they
+    enter the sum (``make_train_step`` fuses the whole accumulation into
+    one scan — nothing can be dropped after the fact)."""
+
+    def loss_of(p, mb):
+        return M.loss_fn(
+            p, mb, cfg, use_kernel=settings.use_kernel, remat=settings.remat,
+            unroll=settings.unroll,
+        )
+
+    def mb_grads(params, mb):
+        (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+        return loss, metrics, jax.tree.map(lambda x: x.astype(jnp.float32), g)
+
+    return mb_grads
+
+
+def make_apply_step(cfg, opt_cfg: O.OptConfig, settings: TrainSettings):
+    """-> apply_step(params, opt_state, grads, loss, metrics) -> (params,
+    opt_state, metrics): the optimizer tail of ``make_train_step`` on
+    pre-accumulated (already averaged/renormalized) gradients."""
+
+    def apply_step(params, opt_state, grads, loss, metrics):
+        if settings.compress_grads:
+            codes, new_err = C.compress_tree(grads, opt_state["err"])
+            grads = C.decompress_tree(codes, grads)
+            opt_state = dict(opt_state, err=new_err)
+        inner = {k: v for k, v in opt_state.items() if k != "err"}
+        params, inner, opt_metrics = O.apply_updates(params, grads, inner, cfg=opt_cfg)
+        new_state = dict(inner)
+        if settings.compress_grads:
+            new_state["err"] = opt_state["err"]
+        metrics = dict(metrics, **opt_metrics)
+        metrics["loss"] = loss
+        return params, new_state, metrics
+
+    return apply_step
+
+
 def init_train_state(key, cfg, opt_cfg: O.OptConfig, settings: TrainSettings):
     params = M.init_params(key, cfg)
     opt_state = O.init_state(params, opt_cfg)

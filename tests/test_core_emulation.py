@@ -94,8 +94,68 @@ def test_largest_embeddable_regime_tie_prefers_cabinets():
     # (0,0,1) poisons positions {0,1} entirely -> only cabinet-drop lives.
     J, L, c_set, p_set = largest_embeddable(D3(2, 2), {(0, 0, 1)})
     assert (J, L) == (1, 2) and c_set == (1,)
+    # on D3(1,2) the pure regimes find nothing, but the mixed search
+    # still recovers the healthy singleton (0,1,1) as a D3(1,1) guest
+    assert largest_embeddable(D3(1, 2), {(0, 0, 1)}) == (1, 1, (0,), (1,))
     with pytest.raises(RuntimeError, match="survives"):
-        largest_embeddable(D3(1, 2), {(0, 0, 1)})
+        largest_embeddable(D3(1, 1), {(0, 0, 0)})  # nothing left at all
+
+
+def test_largest_embeddable_mixed_regime_dominates():
+    """Failures striped across SOME cabinets at SOME positions: one
+    poisoned position is worth dropping (it clears cabinets 1-3), the
+    other is worth keeping a cabinet-drop for — the mixed survivor
+    D3(3,3) = 27 strictly beats cabinet-drop (nothing: every cabinet is
+    hit) and position-drop (4·4 = 16), and is dilation-1 verified."""
+    host = D3(4, 4)
+    dead = {(0, 1, 1), (1, 0, 0), (2, 0, 0), (3, 0, 0)}
+    J, L, c_set, p_set = largest_embeddable(host, dead)
+    assert (J, L) == (3, 3)
+    assert c_set == (1, 2, 3) and p_set == (1, 2, 3)
+    emb = embed(host, J, L, c_set=c_set, p_set=p_set)
+    emb.verify()
+    assert not {emb.map_router(r) for r in emb.guest.routers()} & dead
+
+
+def test_largest_embeddable_mixed_when_both_pure_regimes_die():
+    """Diagonal kills poison every cabinet AND every position — both pure
+    regimes return nothing, but dropping one position un-poisons the
+    cabinets whose dead router sat there."""
+    host = D3(2, 2)
+    dead = {(0, 0, 1), (1, 0, 0)}
+    J, L, c_set, p_set = largest_embeddable(host, dead)
+    assert (J, L) == (2, 1)
+    assert c_set == (0, 1) and p_set == (1,)
+    embed(host, J, L, c_set=c_set, p_set=p_set).verify()
+
+
+def test_largest_embeddable_mixed_never_beats_equal_pure():
+    """Tie-break order is cabinet > position > mixed: the mixed regime is
+    returned only when it STRICTLY dominates both pure regimes, so the
+    pure-regime answers of the existing tests are unchanged."""
+    host = D3(4, 4)
+    # one poisoned cabinet, one poisoned position: cabinet-drop keeps 48
+    dead = {(1, 0, 1), (1, 2, 3)}
+    assert largest_embeddable(host, dead)[:2] == (3, 4)
+    # full stripe at (0,0): dropping the single poisoned position IS the
+    # pure position regime — the mixed search enumerates only PROPER
+    # subsets of the poisoned positions, so position-drop answers alone
+    striped = {(c, 0, 0) for c in range(4)}
+    assert largest_embeddable(host, striped)[:2] == (4, 3)
+
+
+def test_fallback_shapes_cover_mixed_ladder():
+    """Every shape the mixed search can produce is pre-lowered: the
+    fallback ladder is the full (j, l) grid, largest survivors first."""
+    from repro.dist.mesh import DeviceLayout
+    from repro.train.fault_tolerance import ClusterState
+
+    cs = ClusterState(DeviceLayout(D3(3, 3)))
+    shapes = cs.fallback_shapes()
+    assert set(shapes) == {(j, l) for j in (1, 2, 3) for l in (1, 2, 3)}
+    sizes = [j * l * l for j, l in shapes]
+    assert sizes == sorted(sizes, reverse=True)
+    assert shapes[0] == (3, 3)
 
 
 def test_largest_embeddable_dead_position_pair_excluded():

@@ -1,0 +1,270 @@
+"""Elastic training: fault injection, rewrite-only failover, §5-broadcast
+shard redistribution, loss-curve continuity — plus the recovery-path
+satellites (checkpoint hygiene, typed data-state restore, straggler
+renormalization)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.topology import D3
+from repro.dist.mesh import DeviceLayout
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataState, SyntheticLM
+from repro.train.elastic import (
+    ElasticTrainer,
+    FaultInjector,
+    max_loss_divergence,
+)
+from repro.train.fault_tolerance import (
+    ClusterState,
+    StragglerPolicy,
+    derivation_count,
+    renormalized_scale,
+)
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import (
+    TrainSettings,
+    init_train_state,
+    make_apply_step,
+    make_microbatch_grads,
+    make_train_step,
+    split_microbatches,
+)
+
+
+# ------------------------------------------------------ checkpoint hygiene
+def test_latest_step_ignores_stray_files(tmp_path):
+    """Regression: a stray FILE matching step_* (a step_tmp leftover, an
+    editor backup) used to crash latest_step — only step_<int> directories
+    count now, unparseable directory names are skipped too."""
+    ckpt.save(tmp_path, 3, {"x": np.zeros(1)})
+    ckpt.save(tmp_path, 7, {"x": np.ones(1)})
+    (tmp_path / "step_tmp").write_text("leftover")          # stray file
+    (tmp_path / "step_00000099").write_text("not a dir")    # file, big step
+    (tmp_path / "step_bogus").mkdir()                        # unparseable dir
+    assert ckpt.latest_step(tmp_path) == 7
+    step, tree = ckpt.restore(tmp_path)
+    assert step == 7 and float(tree["x"][0]) == 1.0
+
+
+def test_restore_verify_raises_on_truncated_npz(tmp_path):
+    """A truncated arrays.npz must raise on the digest check BEFORE any
+    parameter loads (verify=True is the failover default)."""
+    ckpt.save(tmp_path, 2, {"w": np.arange(64, dtype=np.float32)})
+    arrays = tmp_path / "step_00000002" / "arrays.npz"
+    blob = arrays.read_bytes()
+    arrays.write_bytes(blob[: len(blob) // 2])
+    with pytest.raises(IOError, match="digest mismatch"):
+        ckpt.restore(tmp_path, verify=True)
+
+
+def test_data_state_restore_roundtrip(tmp_path):
+    """Checkpoint -> restore of the data-iterator state: from_dict coerces
+    the numpy scalars npz hands back into real ints, and the restored
+    stream continues exactly where the original left off."""
+    data = SyntheticLM(DataState(seed=5, batch=2, seq=8, vocab=32))
+    for _ in range(3):
+        data.next_batch()
+    ckpt.save(tmp_path, 3, {"data": data.state.to_dict()})
+    expected = data.next_batch()
+
+    _, tree = ckpt.restore(tmp_path)
+    state = DataState.from_dict(tree["data"])
+    for f, v in state.__dict__.items():
+        assert type(v) is int, (f, type(v))
+    resumed = SyntheticLM(state).next_batch()
+    np.testing.assert_array_equal(resumed["tokens"], expected["tokens"])
+
+
+# ----------------------------------------------------------- fault injector
+def test_fault_injector_consume_once():
+    inj = FaultInjector({4: [1, 2], 9: [5]})
+    assert inj.take(3) == ()
+    assert inj.take(4) == (1, 2)
+    assert inj.take(4) == ()    # fired: a post-failover rewind passing the
+    assert inj.take(9) == (5,)  # same step must not re-kill
+    assert inj.take(9) == ()
+
+
+def test_fault_injector_sample_deterministic():
+    host = D3(2, 2)
+    a = FaultInjector.sample(host, steps=12, failures=3, seed=7)
+    b = FaultInjector.sample(host, steps=12, failures=3, seed=7)
+    assert a.schedule == b.schedule
+    devices = [d for devs in a.schedule.values() for d in devs]
+    assert len(devices) == 3 and len(set(devices)) == 3
+    assert all(0 <= d < host.num_routers for d in devices)
+    assert all(1 <= s < 12 for s in a.schedule)
+    with pytest.raises(ValueError):
+        FaultInjector.sample(host, steps=3, failures=9, seed=0)
+
+
+# ------------------------------------------------- elastic trainer (drill)
+def _tiny():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    opt_cfg = OptConfig(lr=3e-3, warmup_steps=2, total_steps=10)
+    settings = TrainSettings(use_kernel=False, remat=False)
+    return cfg, opt_cfg, settings
+
+
+@pytest.fixture(scope="module")
+def cascade_runs(tmp_path_factory):
+    """One uninterrupted run and one twice-shrinking elastic run of the
+    same seed/data — shared by the continuity and cascade assertions."""
+    cfg, opt_cfg, settings = _tiny()
+    kw = dict(host=D3(2, 2), batch=4, seq=16, seed=0, ckpt_every=2)
+    base = ElasticTrainer(
+        cfg, opt_cfg, settings,
+        ckpt_dir=tmp_path_factory.mktemp("base"), **kw)
+    base_losses = base.run(10)
+    el = ElasticTrainer(
+        cfg, opt_cfg, settings,
+        ckpt_dir=tmp_path_factory.mktemp("elastic"),
+        injector=FaultInjector({3: [1], 7: [4]}), **kw)
+    el_losses = el.run(10)
+    return base, base_losses, el, el_losses
+
+
+def test_cascade_survives_and_shrinks_twice(cascade_runs):
+    _, _, el, el_losses = cascade_runs
+    assert len(el_losses) == 10
+    assert [e.shape for e in el.events] == [(1, 2), (2, 1)]
+    assert [e.absorbed for e in el.events] == [False, False]
+    # the survivor pool shrinks monotonically and never includes a dead
+    # device (the second image may re-admit healthy devices the first
+    # image left idle — Property 2 searches the whole host, not the
+    # previous image)
+    assert len(el.events[1].survivors) < len(el.events[0].survivors)
+    dead_so_far: set = set()
+    for e in el.events:
+        dead_so_far |= set(e.failed)
+        assert not set(e.survivors) & dead_so_far
+        assert e.derivations == 0          # rewrite-only, asserted per event
+        assert e.broadcast_rounds >= 1     # shards moved via the §5 program
+        assert e.bytes_redistributed > 0
+        assert e.resumed_from <= e.step
+
+
+def test_cascade_loss_continuity(cascade_runs):
+    """Post-failover losses match the uninterrupted run at equal
+    data-state: recovery restores the exact (params, opt, data) triple, so
+    the two curves coincide everywhere, failovers included."""
+    _, base_losses, _, el_losses = cascade_runs
+    assert set(base_losses) == set(el_losses)
+    assert max_loss_divergence(base_losses, el_losses) < 1e-4
+
+
+def test_cascade_reuses_memoized_library(cascade_runs):
+    """A second plan for the same dead set is a pure cache hit: same suite
+    objects from the shape library, identical rewritten programs from the
+    memoized emulate — and zero derivations."""
+    _, _, el, _ = cascade_runs
+    d0 = derivation_count()
+    p1 = el.cluster.plan_recovery()
+    p2 = el.cluster.plan_recovery()
+    assert derivation_count() == d0
+    assert set(el.cluster.library) >= {(2, 2), (1, 2), (2, 1), (1, 1)}
+    for kind in p1.programs:
+        assert p1.programs[kind] is p2.programs[kind]
+
+
+def test_absorbed_failure_outside_image_keeps_stepping(tmp_path):
+    """After shrinking to cabinet 1 (devices 4-7), killing device 0 —
+    outside the active image — must not rewind: the sitting plan stays
+    valid and training continues from the detection step."""
+    cfg, opt_cfg, settings = _tiny()
+    el = ElasticTrainer(
+        cfg, opt_cfg, settings, ckpt_dir=tmp_path, host=D3(2, 2),
+        injector=FaultInjector({2: [1], 5: [0]}),
+        batch=4, seq=16, seed=0, ckpt_every=3)
+    losses = el.run(8)
+    assert len(losses) == 8
+    first, second = el.events
+    assert not first.absorbed and first.shape == (1, 2)
+    assert second.absorbed
+    assert second.resumed_from == second.step == 5
+    assert second.broadcast_rounds == 0 and second.bytes_redistributed == 0
+    assert second.derivations == 0
+
+
+def test_unprepared_shape_is_refused(tmp_path):
+    """plan_recovery never derives: an empty library raises rather than
+    silently re-deriving inside the failover window."""
+    from repro.train.fault_tolerance import UnpreparedShapeError
+    cs = ClusterState(DeviceLayout(D3(2, 2)))
+    cs.fail(1)
+    with pytest.raises(UnpreparedShapeError):
+        cs.plan_recovery()
+
+
+# ------------------------------------------------ straggler renormalization
+def test_straggler_drop_renormalized_matches_kept_batch():
+    """The split step (per-microbatch grads + renormalized accumulation +
+    apply) with microbatch i dropped equals the FUSED step run on a batch
+    containing only the kept microbatches — the dropped contribution is
+    gone, not smeared."""
+    cfg = get_smoke_config("olmo-1b")
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=0)
+    data = SyntheticLM(DataState(seed=3, batch=8, seq=16, vocab=cfg.vocab))
+    batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+    total = 4
+    settings = TrainSettings(microbatches=total, use_kernel=False, remat=False)
+    params, opt_state = init_train_state(jax.random.key(1), cfg, opt_cfg, settings)
+
+    mb_grads = jax.jit(make_microbatch_grads(cfg, settings))
+    apply_fn = jax.jit(make_apply_step(cfg, opt_cfg, settings))
+    mbs = split_microbatches(batch, total)
+    keep = [True, True, False, True]           # microbatch 2 straggles
+    results = [mb_grads(params, mb) for mb in mbs]
+    kept = [r for r, k in zip(results, keep) if k]
+    scale = renormalized_scale(len(kept), total) / total   # == 1 / kept
+    g_sum = jax.tree.map(lambda *gs: sum(gs), *(g for _, _, g in kept))
+    grads = jax.tree.map(lambda g: g * scale, g_sum)
+    loss = sum(l for l, _, _ in kept) * scale
+    p_drop, _, m_drop = apply_fn(params, opt_state, grads, loss, kept[-1][1])
+
+    # reference: the fused step over ONLY the kept microbatches
+    kept_batch = {
+        k: jnp.concatenate([mb[k] for mb, kp in zip(mbs, keep) if kp])
+        for k in batch
+    }
+    ref_settings = TrainSettings(microbatches=len(kept), use_kernel=False, remat=False)
+    ref_step = jax.jit(make_train_step(cfg, opt_cfg, ref_settings))
+    p_ref, _, m_ref = ref_step(params, opt_state, kept_batch)
+
+    assert float(m_drop["loss"]) == pytest.approx(float(m_ref["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(p_drop), jax.tree.leaves(p_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-6)
+
+
+def test_straggler_policy_and_scale():
+    policy = StragglerPolicy()
+    keep = policy.judge([1.0, 1.1, 0.9, 25.0])
+    assert keep == [True, True, True, False]
+    assert renormalized_scale(sum(keep), len(keep)) == pytest.approx(4 / 3)
+
+
+# ------------------------------------------- subprocess end-to-end drill
+@pytest.mark.slow
+def test_elastic_drill_16dev():
+    """Device-backed randomized fault-injection drill on a forced
+    16-device mesh (the CI smoke): seeded kills, jax-backend §5
+    redistribution, loss continuity vs. the uninterrupted run."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env["PYTHONPATH"] = str(root / "src")
+    proc = subprocess.run(
+        [sys.executable, str(root / "tests" / "elastic_check_script.py")],
+        env=env, capture_output=True, text=True, timeout=1200,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ELASTIC CHECKS PASSED" in proc.stdout
