@@ -470,6 +470,82 @@ def bench_autotuner(log=print):
     tuner.save()
 
 
+def bench_export(log=print):
+    """Collective compiler export (runtime/export.py): compile the §2–§5
+    programs at n=16 into versioned per-device send/recv traces, re-prove
+    them (structure, link conflict-freedom, send/recv pairing), JSON
+    round-trip them, and replay the traces through the ``sendrecv``
+    interpreter — asserted bit-identical to the reference backend in-line,
+    so a drifting exporter fails the bench instead of logging a row.
+
+    Rows (family ``export``):
+      * ``export_compile``   — cold export (lru cache cleared inside the
+        timed closure) with the trace's group/op/send/wave counts;
+      * ``export_validate``  — the static validator on the exported form;
+      * ``export_roundtrip`` — ``to_json`` + ``from_json`` (lossless),
+        with the serialized byte size;
+      * ``export_replay``    — the NumPy trace interpreter executing the
+        trace (the ``sendrecv`` backend's hot path).
+    """
+    from repro.core.topology import D3
+    from repro.dist import collectives as coll
+    from repro.dist.mesh import DeviceLayout
+    from repro.runtime import export as rexport
+    from repro.runtime.backends.reference import NumpyReferenceBackend
+    from repro.runtime.backends.sendrecv import SendRecvBackend
+
+    layout = DeviceLayout(D3(4, 2))  # n=16, power-of-two SBH
+    progs = [
+        ("alltoall", coll.alltoall_program(layout)),
+        ("alltoall_pipe1", coll.alltoall_program(layout, pipelined=1)),
+        ("allreduce", coll.allreduce_program(layout)),
+        ("broadcast", coll.broadcast_program(layout, 0)),
+        ("matmul", coll.matmul_program(2, 2)),
+    ]
+    rng = np.random.default_rng(0)
+    sr, ref = SendRecvBackend(), NumpyReferenceBackend()
+    for name, prog in progs:
+        def cold_export():
+            rexport._export.cache_clear()
+            return rexport.export(prog)
+
+        trace, us = _timed(cold_export)
+        log(
+            f"export_compile,kind={name},n={prog.n},groups={trace.num_groups},"
+            f"ops={trace.num_ops},sends={trace.num_sends},"
+            f"waves={len(trace.waves())},us_per_call={us:.0f}"
+        )
+        _, us = _timed(lambda: rexport.validate(trace))
+        log(f"export_validate,kind={name},n={prog.n},ops={trace.num_ops},"
+            f"us_per_call={us:.0f}")
+        text = trace.to_json()
+        back, us = _timed(lambda: rexport.DeviceTrace.from_json(trace.to_json()))
+        assert back == trace, f"{name}: JSON round-trip not lossless"
+        log(f"export_roundtrip,kind={name},n={prog.n},bytes={len(text)},"
+            f"us_per_call={us:.0f}")
+        if prog.kind == "alltoall":
+            x = rng.integers(-4, 5, (prog.n, prog.n, 4)).astype(np.float32)
+            out, us = _timed(sr.run_alltoall, x, prog)
+            ok = np.array_equal(out, ref.run_alltoall(x, prog))
+        elif prog.kind == "allreduce":
+            x = rng.integers(-4, 5, (prog.n, 8)).astype(np.float32)
+            out, us = _timed(sr.run_allreduce, x, prog)
+            ok = np.array_equal(out, ref.run_allreduce(x, prog))
+        elif prog.kind == "broadcast":
+            x = rng.integers(-4, 5, (prog.n, 8)).astype(np.float32)
+            out, us = _timed(sr.run_broadcast, x, prog)
+            ok = np.array_equal(out, ref.run_broadcast(x, prog))
+        else:  # matmul: N=4 grid of 2x2 blocks -> 8x8 operands
+            side = 4 * 2
+            B = rng.integers(-4, 5, (side, side)).astype(np.float32)
+            A = rng.integers(-4, 5, (side, side)).astype(np.float32)
+            out, us = _timed(sr.run_matmul, B, A, prog)
+            ok = np.array_equal(out, ref.run_matmul(B, A, prog))
+        assert ok, f"{name}: sendrecv replay diverged from reference"
+        log(f"export_replay,kind={name},n={prog.n},backend=sendrecv,"
+            f"us_per_call={us:.0f}")
+
+
 def bench_moe_pipeline(log=print):
     """Pipelined shard-path dispatch (§3 Schedules 1–3 overlapped with
     expert compute): the MoE-shaped dispatch+FFN+combine round trip on the
@@ -868,6 +944,8 @@ def main(argv=None) -> None:
     bench_concurrent_guests(log)
     print("# ---- price-driven autotuner (decision table + strategy timings)")
     bench_autotuner(log)
+    print("# ---- collective compiler export (send/recv traces + trace replay)")
+    bench_export(log)
     print("# ---- pipelined shard-path dispatch (waves overlapped with expert FFN)")
     bench_moe_pipeline(log)
     print("# ---- multi-tenant serving (combined fleet vs time-multiplexed)")

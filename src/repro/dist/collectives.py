@@ -35,6 +35,11 @@ so N tenants' collectives run in max(T_i) rounds instead of Σ T_i;
 ``concurrent_programs`` builds the whole suite at once. Per-guest inputs
 and results move through ``runtime.combine.scatter_guests`` /
 ``gather_guests``.
+
+Every cached program also exports to a versioned per-device send/recv op
+trace through ``device_trace`` (``runtime.export``); ``backend="sendrecv"``
+replays that exported form bit-exactly, so the JSON a non-XLA substrate
+would consume is differential-testable right here.
 """
 
 from __future__ import annotations
@@ -229,6 +234,19 @@ def concurrent_programs(
             optimized=optimized,
         )
     return out
+
+
+# ----------------------------------------------------------- trace export
+def device_trace(program):
+    """The versioned per-device send/recv op trace of any program the
+    getters above return (``runtime.export``), statically validated for
+    link-conflict-freedom and send/recv pairing — the form a non-XLA
+    substrate consumes, and what ``backend="sendrecv"`` replays. Memoized
+    per program alongside the lowering caches; accepts the
+    ``optimized=True`` fused form too (same trace as its source)."""
+    from repro.runtime.backends.sendrecv import SendRecvBackend
+
+    return SendRecvBackend.trace(program)
 
 
 # ------------------------------------------------------------- collectives

@@ -129,15 +129,41 @@ time), one upload of stacked index tensors (trace time), one advanced-
 indexing pass per group (host replay).
 
 ``backends.get_backend("jax_ppermute" | "reference" | "pallas_fused" |
-"auto")`` instantiates the built-ins: ppermutes on a JAX mesh (optionally
-overlapped), a pure-NumPy host replay used for differential testing and
-device-free validation, and the Pallas-fused backend — optimized-table
-replay with Pallas kernels on the ReduceCombine rounds and the §2
-``mul_a`` block contraction. The Pallas kernels run compiled on TPU (where
-``run_allreduce``'s exchange uses the remote-DMA ring pattern) and under
-``interpret=True`` everywhere else, so CPU CI exercises the fused path
-bit-for-bit; interpret mode is a correctness vehicle, not a performance
-one — see ``backends/pallas_fused.py`` for the caveats.
+"sendrecv" | "auto")`` instantiates the built-ins: ppermutes on a JAX
+mesh (optionally overlapped), a pure-NumPy host replay used for
+differential testing and device-free validation, the Pallas-fused
+backend — optimized-table replay with Pallas kernels on the
+ReduceCombine rounds and the §2 ``mul_a`` block contraction — and the
+send/recv trace interpreter (below). The Pallas kernels run compiled on
+TPU (where ``run_allreduce``'s exchange uses the remote-DMA ring
+pattern) and under ``interpret=True`` everywhere else, so CPU CI
+exercises the fused path bit-for-bit; interpret mode is a correctness
+vehicle, not a performance one — see ``backends/pallas_fused.py`` for
+the caveats. Conformance is executable: every registered backend is
+swept against ``reference`` across all four algorithms and all program
+forms by ``tests/test_backend_contract.py``.
+
+Send/recv export guarantees (``export.export(program)``)
+--------------------------------------------------------
+The portable half of the collective compiler: any program — lowered,
+optimized, emulated, combined — compiles to a versioned,
+JSON-serializable :class:`~repro.runtime.export.DeviceTrace`, an ordered
+op list PER DEVICE over five primitives (``send`` / ``recv`` /
+``reduce`` / ``copy`` / ``contract``). What the export preserves:
+
+  * **stamps** — every op keeps its ``(round_index, step)`` group and
+    ``start_step`` launch window, so pipelined §3/§5 schedules export
+    with their real overlap waves (``DeviceTrace.waves()``);
+  * **static safety, re-proved** — ``export.validate`` checks the
+    EXPORTED form (not the IR it came from) for link-conflict-freedom
+    per synchronous step AND per overlap window, exact send/recv pairing
+    per group, and structurally-empty op lists on idle devices; failures
+    raise typed ``TraceValidationError`` subclasses;
+  * **executability** — the ``sendrecv`` backend replays the trace alone
+    (never the program stages) bit-identically to every other backend;
+    ``to_json``/``from_json`` round-trip losslessly, so the JSON file is
+    the whole program (``python -m repro.runtime.export`` validates
+    saved traces from the CLI — the CI artifact check).
 
 Autotuner guarantees (``autotune.Autotuner`` / the ``auto`` backend)
 ---------------------------------------------------------------------
@@ -146,7 +172,8 @@ one fast default path. Per call site — keyed on ``(kind, D3 topology,
 bucketed message bytes, dtype, site)`` — it picks the cheapest of the
 strategies structurally available there (per-stage ``loop`` replay,
 ``start_step``-ordered ``overlap``, fused ``optimize()`` tables, the
-``pallas_fused`` backend, or the plain ``xla`` collective), seeded by
+``pallas_fused`` backend, the device-free ``sendrecv`` trace replay, or
+the plain ``xla`` collective), seeded by
 ``core.costmodel`` analytic prices and calibrated by one-shot measured
 timings memoized in a schema-versioned on-disk cache. What it preserves:
 
@@ -168,6 +195,7 @@ from repro.runtime import (  # noqa: F401
     backends,
     combine,
     compat,
+    export,
     lowering,
     optimize,
     program,

@@ -13,9 +13,10 @@ hardcoded one strategy. The ``Autotuner`` closes that gap:
     two so nearby shapes share one decision;
   * the candidate strategies per site class are
 
-      - ``site="host"``   (NumPy whole-array callers):   loop | fused
+      - ``site="host"``   (NumPy whole-array callers):   loop | fused |
+        sendrecv
       - ``site="global"`` (device whole-array ``run_*``): loop | fused |
-        pallas_fused | xla
+        pallas_fused | sendrecv | xla
       - ``site="shard"``  (inside a caller's shard_map, e.g. MoE
         dispatch): xla | loop | overlap | overlap_fused (all-to-all
         only — the fused wave pipeline that overlaps dispatch with the
@@ -31,8 +32,11 @@ hardcoded one strategy. The ``Autotuner`` closes that gap:
 
     where ``loop`` is the per-stage D3 schedule replay, ``overlap`` the
     same program in ``start_step`` order, ``fused`` the ``optimize()``
-    table replay, ``pallas_fused`` the Pallas-kernel backend, and ``xla``
-    the fused XLA collective (``lax.all_to_all`` / ``psum``). Inside a
+    table replay, ``pallas_fused`` the Pallas-kernel backend, ``sendrecv``
+    the exported per-device trace replayed by the NumPy interpreter
+    (``runtime.export`` + ``backends/sendrecv`` — device-free, like the
+    host-site strategies), and ``xla`` the fused XLA collective
+    (``lax.all_to_all`` / ``psum``). Inside a
     shard_map the fused-table form of an all-to-all IS the single fused
     op, so ``xla`` is how "fused" manifests at shard sites;
   * decisions are SEEDED by analytic prices — ``costmodel.price`` of the
@@ -81,7 +85,7 @@ DEFAULT_CACHE = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "au
 KINDS = ("alltoall", "allreduce", "broadcast", "matmul")
 SITES = ("host", "global", "shard", "combined")
 STRATEGIES = ("loop", "overlap", "fused", "pallas_fused", "xla",
-              "overlap_fused", "combined", "time_mux")
+              "overlap_fused", "sendrecv", "combined", "time_mux")
 
 #: analytic seed constants (calibration overrides these — they only need to
 #: produce a sane ranking before the first measurement lands in the cache)
@@ -91,6 +95,7 @@ T_DISPATCH = 5.0e-6   # software overhead per replayed stage (loop paths)
 T_GROUP = 2.0e-6      # software overhead per fused table group
 T_KERNEL = 10.0e-6    # extra per-group cost of a Pallas kernel launch
 T_XLA = 20.0e-6       # fixed overhead of one fused XLA collective
+T_TRACE_OP = 2.0e-6   # per-op overhead of the sendrecv trace interpreter
 COMPUTE_RATE = 2e9    # proxy flops/s for sizing synthetic pipeline compute
 
 
@@ -187,9 +192,9 @@ def candidates(kind: str, site: str, *, emulated: bool = False) -> tuple[str, ..
     if site == "combined":
         return ("combined", "time_mux")
     if site == "host":
-        out: tuple[str, ...] = ("loop", "fused")
+        out: tuple[str, ...] = ("loop", "fused", "sendrecv")
     elif site == "global":
-        out = ("loop", "fused", "pallas_fused")
+        out = ("loop", "fused", "pallas_fused", "sendrecv")
         if kind in ("alltoall", "allreduce"):
             out += ("xla",)
     elif site == "shard":
@@ -291,6 +296,14 @@ def analytic_prices(kind: str, layout, nbytes: int, strategies, grid=None,
                                     bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
         elif s == "pallas_fused":
             sec = costmodel.seconds(hops, T_W, n_groups * (T_GROUP + T_KERNEL),
+                                    bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
+        elif s == "sendrecv":
+            # the exported-trace interpreter walks every per-device op —
+            # honest seeding keeps it priced above the fused table replay
+            from repro.runtime import export as rexport
+
+            n_ops = rexport.export(prog).num_ops
+            sec = costmodel.seconds(hops, T_W, n_ops * T_TRACE_OP,
                                     bytes_per_hop=nbytes, bandwidth=BANDWIDTH)
         elif s == "xla":
             # one fused op: latency-optimal collective, e.g. n-1 exchange
@@ -412,9 +425,14 @@ def _measure_closure(kind: str, site: str, strategy: str, layout, grid,
         x = rng.standard_normal((prog.n, e)).astype(dtype)
 
     if site == "host":
-        from repro.runtime.backends.reference import NumpyReferenceBackend
+        if strategy == "sendrecv":
+            from repro.runtime.backends.sendrecv import SendRecvBackend
 
-        ref = NumpyReferenceBackend()
+            ref = SendRecvBackend()
+        else:
+            from repro.runtime.backends.reference import NumpyReferenceBackend
+
+            ref = NumpyReferenceBackend()
         p = ropt.optimize(prog) if strategy == "fused" else prog
         if kind == "alltoall":
             return lambda: ref.run_alltoall(x, p)
@@ -423,6 +441,18 @@ def _measure_closure(kind: str, site: str, strategy: str, layout, grid,
         if kind == "broadcast":
             return lambda: ref.run_broadcast(x, p)
         return lambda: ref.run_matmul(B, A, p)
+
+    if strategy == "sendrecv":
+        # device-free at every site class it is a candidate for: the trace
+        # interpreter needs no mesh quorum, so measure it before touching jax
+        from repro.runtime.backends.sendrecv import SendRecvBackend
+
+        be = SendRecvBackend()
+        if kind == "matmul":
+            return lambda: be.run_matmul(B, A, prog)
+        run = {"alltoall": be.run_alltoall, "allreduce": be.run_allreduce,
+               "broadcast": be.run_broadcast}[kind]
+        return lambda: run(x, prog)
 
     # device-backed sites
     import jax

@@ -31,11 +31,18 @@ Built-in backends:
     §2 ``mul_a`` contraction goes through ``kernels/block_matmul``.
     ``interpret=True`` (automatic off-TPU) runs the same kernels in the
     Pallas interpreter so CPU CI exercises the fused path bit-for-bit.
+  * ``sendrecv`` — the NCCL-style serialization backend: compiles every
+    program through ``runtime.export`` into a per-device send/recv op
+    trace (versioned, JSON-serializable, statically re-validated for
+    link-conflict-freedom and send/recv pairing) and replays THE TRACE in
+    pure NumPy — the executable proof that the exported form alone, with
+    no Schedule IR and no program stages, reproduces every backend's bits
+    on native, optimized, emulated, and combined programs.
   * ``auto`` — no executor of its own: each call asks the price-driven
     autotuner (``runtime.autotune``) for the cheapest strategy at this
-    call site — per-stage loop, overlapped, fused-table, Pallas, or the
-    plain XLA collective — and delegates to it. Same bits either way; the
-    tuner only moves latency.
+    call site — per-stage loop, overlapped, fused-table, Pallas, the
+    send/recv trace replay, or the plain XLA collective — and delegates
+    to it. Same bits either way; the tuner only moves latency.
 
 Every backend's ``run_*`` also accepts an ``optimize.OptimizedProgram``
 (the fused table form) and must produce the same bits for it as for the
@@ -49,9 +56,12 @@ The same holds for COMBINED multi-guest programs (``runtime.combine``):
 their ``active_devices`` is the concatenation of the guests' images, and
 a conforming backend replays them unchanged.
 
-Future backends (NCCL-style send/recv lists) plug in as additional modules
-here: add a loader to ``_REGISTRY`` and it shows up in
-``available_backends()`` / ``get_backend``.
+New backends plug in as additional modules here: add a loader to
+``_REGISTRY`` and it shows up in ``available_backends()`` /
+``get_backend`` — and in the executable conformance suite
+(``tests/test_backend_contract.py``), which replays every registered
+backend against ``reference`` bit-for-bit across all four algorithms and
+all four program forms (plain, optimized, emulated, combined).
 """
 
 from __future__ import annotations
@@ -75,6 +85,12 @@ def _load_pallas_fused():
     return PallasFusedBackend
 
 
+def _load_sendrecv():
+    from repro.runtime.backends.sendrecv import SendRecvBackend
+
+    return SendRecvBackend
+
+
 def _load_auto():
     from repro.runtime.backends.auto import AutoBackend
 
@@ -87,10 +103,12 @@ _REGISTRY = {
     "jax_ppermute": _load_jax_ppermute,
     "reference": _load_reference,
     "pallas_fused": _load_pallas_fused,
+    "sendrecv": _load_sendrecv,
     "auto": _load_auto,
 }
 
-_ALIASES = {"jax": "jax_ppermute", "numpy": "reference", "pallas": "pallas_fused"}
+_ALIASES = {"jax": "jax_ppermute", "numpy": "reference", "pallas": "pallas_fused",
+            "trace": "sendrecv"}
 
 
 def available_backends() -> tuple[str, ...]:

@@ -13,6 +13,9 @@ to the strategy's executor —
   * ``overlap_fused`` the wave-ordered fused-table pipeline (all-to-all:
     single gather/scatter dispatch, and the fused dispatch+compute+combine
     round trip of ``alltoall_compute``)
+  * ``sendrecv``      the exported per-device send/recv trace replayed by
+    the NumPy interpreter (``runtime.export`` — device-free, never needs
+    a mesh quorum, so it is exempt from the too-few-devices degrade)
 
 Whole-array ``run_*`` calls tune at ``site="global"``; the per-shard
 methods (valid inside a caller's shard_map, e.g. MoE dispatch) tune at
@@ -114,6 +117,10 @@ class AutoBackend:
             from repro.runtime.backends.pallas_fused import PallasFusedBackend
 
             return PallasFusedBackend(), prog
+        if strategy == "sendrecv":
+            from repro.runtime.backends.sendrecv import SendRecvBackend
+
+            return SendRecvBackend(), prog
         if strategy == "overlap_fused":
             return JaxPpermuteBackend(overlap_fused=True), prog
         be = JaxPpermuteBackend(overlap=(strategy == "overlap"))

@@ -46,9 +46,12 @@ def test_bucket_bytes_powers_of_two():
 
 
 def test_candidates_per_site():
-    assert at.candidates("alltoall", "host") == ("loop", "fused")
+    assert at.candidates("alltoall", "host") == ("loop", "fused", "sendrecv")
     assert "xla" in at.candidates("alltoall", "shard")
     assert "xla" in at.candidates("alltoall", "global")
+    assert "sendrecv" in at.candidates("alltoall", "global")
+    # the trace interpreter is a host-style replay: never a shard candidate
+    assert "sendrecv" not in at.candidates("alltoall", "shard")
     assert "xla" not in at.candidates("matmul", "global")   # no fused-op form
     # emulated programs exclude xla: the fused op would mix idle devices
     assert "xla" not in at.candidates("alltoall", "shard", emulated=True)
